@@ -1,0 +1,69 @@
+"""Communication-scaling table (Sections IV-B, IV-C, VI).
+
+The paper's central systems claim: distributed application costs 2K|E|
+messages of length 1 (Phi~ f), 2K|E| of length eta (Phi~* a), 4K|E| of
+length 1 (Phi~*Phi~ f), and one lasso ISTA iteration costs 2K|E| x (J+1)
++ 2K|E| — scaling with |E| only, independent of N otherwise. Verified by
+counting on random graphs of increasing size, plus the ADMM distributed-
+lasso alternative's 2|E| x N(J+1) per iteration for contrast (Section VI).
+Also reports the TPU halo-byte analog of the sharded path."""
+import jax
+import numpy as np
+
+from repro.core import distributed as dist
+from repro.core import graph
+from repro.core.multiplier import UnionMultiplier
+from repro.core.wavelets import sgwt_multipliers
+
+from .common import row
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    K, J = 20, 6
+    for n in (125, 250, 500, 1000):
+        # keep expected degree constant: kappa ~ sqrt(500/n) * 0.075
+        kappa = 0.075 * float(np.sqrt(500.0 / n))
+        g, key = graph.connected_sensor_graph(key, n=n, theta=kappa,
+                                              kappa=kappa)
+        E = g.n_edges
+        lmax = g.lambda_max_bound()
+        op = UnionMultiplier(P=g.laplacian(),
+                             multipliers=sgwt_multipliers(lmax, J),
+                             lmax=lmax, K=K)
+        mc = op.message_counts(E)
+        ista_scalars = (mc["gram_messages"] * 1
+                        + mc["adjoint_messages"] * (J + 1))
+        admm_scalars = 2 * E * n * (J + 1)  # ADMM lasso [29,30] per iteration
+        row(f"comm_N{n}", 0.0,
+            f"E={E};apply={mc['apply_messages']};gram={mc['gram_messages']};"
+            f"ista_scalars={ista_scalars};admm_scalars={admm_scalars};"
+            f"ratio={admm_scalars / max(ista_scalars, 1):.1f}x")
+
+    # sharded halo-byte analog (DESIGN.md §3)
+    g, key = graph.connected_sensor_graph(key, n=600, theta=0.07, kappa=0.07)
+    gs, _ = graph.spatial_sort(g)
+    parts, leak = dist.partition_banded(np.asarray(gs.laplacian()), 8)
+    row("comm_halo_8shards", 0.0,
+        f"leak={leak};bytes_per_apply={dist.halo_bytes_per_apply(parts, K)};"
+        f"bytes_per_ista_iter={dist.halo_bytes_per_apply(parts, K, eta=J + 1) + dist.halo_bytes_per_apply(parts, K)}")
+
+    # Chebyshev gossip vs fabric all-reduce traffic model (DESIGN.md §4.1):
+    # exact ring consensus needs K = ceil(n/2) rounds x 2 neighbour sends of
+    # the gradient (G bytes fp32); ring all-reduce moves ~2G. int8 messages
+    # (ref [31] extension) close most of the gap while tolerating link loss.
+    from repro.dist import gossip
+
+    for n_dev in (8, 16):
+        Kg = len(gossip.consensus_coeffs(n_dev)) - 1
+        err = gossip.consensus_error(n_dev, gossip.consensus_coeffs(n_dev))
+        fp32 = 2 * Kg            # sends per device, units of G bytes
+        int8 = 2 * Kg / 4.0
+        row(f"comm_gossip_ring{n_dev}", 0.0,
+            f"rounds={Kg};consensus_err={err:.1e};"
+            f"gossip_fp32={fp32:.0f}G;gossip_int8={int8:.0f}G;allreduce=2G;"
+            f"note=int8 gossip ~ all-reduce parity + straggler tolerance")
+
+
+if __name__ == "__main__":
+    run()

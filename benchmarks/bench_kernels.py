@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks: jitted reference path wall-time on CPU (TPU
+kernels are validated in interpret mode — timing them interpreted is
+meaningless, so the CSV times the jnp oracle the kernels must beat and
+reports roofline-model bytes/flops per call as `derived`)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chebyshev as cheb
+from repro.core import filters, graph
+from repro.kernels import ops, ref
+
+from .common import row, time_fn
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    g, key = graph.connected_sensor_graph(key, n=500)
+    L = np.asarray(g.laplacian())
+    A = graph.to_block_ell(L, (8, 128))
+    x = jax.random.normal(key, (A.padded_n,))
+
+    spmv = jax.jit(lambda v: ref.block_ell_spmv_ref(A.blocks, A.indices, v))
+    us = time_fn(spmv, x)
+    nnz_blocks = int(np.asarray(A.mask).sum())
+    row("spmv_blockell_n500", us,
+        f"slots={A.blocks.shape[1]};nnz_blocks={nnz_blocks};"
+        f"flops={nnz_blocks * 2 * 8 * 128}")
+
+    lmax = g.lambda_max_bound()
+    coeffs = cheb.cheb_coeffs_stack(
+        [filters.tikhonov(1.0), filters.heat(0.5)], 20, lmax)
+    fused = jax.jit(lambda v: ops.fused_cheb_apply(A, v, coeffs, lmax,
+                                                   use_pallas=False))
+    us = time_fn(fused, x)
+    row("fused_cheb_apply_K20", us, f"eta=2;matvecs=20")
+
+    B, Hq, Hkv, S, D = 1, 8, 2, 1024, 64
+    q = jax.random.normal(key, (B, Hq, S, D))
+    k = jax.random.normal(key, (B, Hkv, S, D))
+    v = jax.random.normal(key, (B, Hkv, S, D))
+    att = jax.jit(lambda a, b, c: ref.attention_ref(a, b, c, causal=True))
+    us = time_fn(att, q, k, v)
+    row("attention_ref_1k", us, f"flops~{4 * B * Hq * S * S * D}")
+
+    from repro.models.layers import attention_chunked
+    attc = jax.jit(lambda a, b, c: attention_chunked(a, b, c, causal=True,
+                                                     chunk=256))
+    us = time_fn(attc, q, k, v)
+    row("attention_chunked_1k", us, "chunk=256")
+
+    eta, n = 7, 1 << 16
+    a = jax.random.normal(key, (eta, n))
+    th = jnp.full((eta, 1), 0.2)
+    shr = jax.jit(lambda z: ref.ista_shrink_ref(z, z * 0.5, z * 0.1, th,
+                                                gamma=0.2))
+    us = time_fn(shr, a)
+    row("ista_shrink_64k", us, f"eta={eta}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,78 @@
+"""Paper Section VI table: distributed wavelet-lasso denoising MSEs.
+
+Paper (1000 connected trials, N=500, J=6, K=15, 300 ISTA iterations):
+    noisy 0.250 | Tikhonov 0.098 | exact-operator lasso 0.088 |
+    Chebyshev-approximate lasso 0.079.
+Defaults here run fewer trials/iterations for CPU wall-time; flags scale up.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SENSOR500
+from repro.core import filters, graph, lasso, wavelets
+from repro.core.multiplier import UnionMultiplier, graph_multiplier
+from repro.data.pipeline import graph_signal_batch
+
+from .common import row
+
+
+class _ExactUnion:
+    """Eigendecomposition-backed exact operator (paper's 'exact lasso')."""
+
+    def __init__(self, op: UnionMultiplier):
+        self.op = op
+        lam, U = np.linalg.eigh(np.asarray(op.P))
+        self.mats = [
+            jnp.asarray(U @ np.diag(np.asarray(g(lam))) @ U.T)
+            for g in op.multipliers
+        ]
+        self.eta = op.eta
+
+    def apply(self, f):
+        return jnp.stack([M @ f for M in self.mats])
+
+    def apply_adjoint(self, a):
+        return sum(M @ a[j] for j, M in enumerate(self.mats))
+
+
+def run(n_trials: int = 5, n_iters: int = 150, n: int = None):
+    p = SENSOR500
+    n = n or p.n_vertices
+    key = jax.random.PRNGKey(3)
+    res = {"noisy": [], "tikhonov": [], "lasso_exact": [], "lasso_cheb": []}
+    mu = jnp.array([p.lasso_mu_scaling] + [p.lasso_mu_wavelet] * p.n_wavelet_scales)
+    for _ in range(n_trials):
+        g, key = graph.connected_sensor_graph(key, n=n, theta=p.theta,
+                                              kappa=p.kappa)
+        f0 = graph_signal_batch(key, g.coords, "piecewise")
+        key, sub = jax.random.split(key)
+        y = f0 + p.noise_sigma * jax.random.normal(sub, f0.shape)
+        lmax = g.lambda_max_bound()
+
+        tik = graph_multiplier(g.laplacian(), filters.tikhonov(p.tau, p.r),
+                               lmax, K=p.K).apply(y)
+        op = UnionMultiplier(
+            P=g.laplacian(),
+            multipliers=wavelets.sgwt_multipliers(lmax, J=p.n_wavelet_scales),
+            lmax=lmax, K=p.lasso_K,
+        )
+        lo = lasso.distributed_lasso(op, y, mu=mu, gamma=p.lasso_gamma,
+                                     n_iters=n_iters)
+        ex = _ExactUnion(op)
+        lo_ex = lasso.distributed_lasso(ex, y, mu=mu, gamma=p.lasso_gamma,
+                                        n_iters=n_iters)
+        res["noisy"].append(float(jnp.mean((y - f0) ** 2)))
+        res["tikhonov"].append(float(jnp.mean((tik - f0) ** 2)))
+        res["lasso_cheb"].append(float(jnp.mean((lo.signal - f0) ** 2)))
+        res["lasso_exact"].append(float(jnp.mean((lo_ex.signal - f0) ** 2)))
+    means = {k: np.mean(v) for k, v in res.items()}
+    row("lasso_table", 0.0,
+        f"noisy={means['noisy']:.3f};tikhonov={means['tikhonov']:.3f};"
+        f"lasso_exact={means['lasso_exact']:.3f};"
+        f"lasso_cheb={means['lasso_cheb']:.3f};"
+        f"paper=0.250/0.098/0.088/0.079;trials={n_trials};iters={n_iters}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Render the §Dry-run / §Roofline tables from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun/baseline
+"""
+import glob
+import json
+import os
+import sys
+
+
+def load(dirpath):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(f) as fh:
+            data = json.load(fh)
+            recs.extend(data if isinstance(data, list) else [data])
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 1e9:.2f}G"
+
+
+def table(recs):
+    hdr = ("arch", "shape", "mesh", "status", "comp_s", "mem_s(raw)",
+           "mem_s(struct)", "coll_s", "dominant", "frac", "useful",
+           "hbm/dev", "fits")
+    rows = [hdr]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs = sorted(recs, key=lambda r: (r.get("mesh", ""), r["arch"],
+                                       order.get(r["shape"], 9)))
+    for r in recs:
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], r.get("mesh", "?"),
+                         r["status"], "-", "-", "-", "-", "-", "-", "-", "-",
+                         "-"))
+            continue
+        rf = r["roofline"]
+        mem = r.get("memory", {})
+        rows.append((
+            r["arch"], r["shape"], r["mesh"], "ok",
+            f"{rf['compute_s']:.4f}", f"{rf['memory_s']:.3f}",
+            f"{rf.get('memory_struct_s') or 0:.3f}",
+            f"{rf['collective_s']:.3f}", rf["dominant"],
+            f"{rf['compute_fraction']:.3f}",
+            f"{(r.get('useful_flops_ratio') or 0):.2f}",
+            fmt_bytes(mem.get("total_hbm_bytes")),
+            {True: "y", False: "N", None: "?"}[r.get("fits_hbm_16g")],
+        ))
+    widths = [max(len(str(row[i])) for row in rows) for i in range(len(hdr))]
+    out = []
+    for i, row in enumerate(rows):
+        out.append(" | ".join(str(c).ljust(w) for c, w in zip(row, widths)))
+        if i == 0:
+            out.append("-+-".join("-" * w for w in widths))
+    return "\n".join(out)
+
+
+def main():
+    dirpath = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun/baseline"
+    recs = load(dirpath)
+    print(table(recs))
+    ok = [r for r in recs if r["status"] == "ok"]
+    sk = [r for r in recs if r["status"] == "skipped"]
+    er = [r for r in recs if r["status"] == "error"]
+    print(f"\n{len(ok)} ok / {len(sk)} skipped / {len(er)} error "
+          f"(of {len(recs)} cells)")
+    for r in er:
+        print(f"  ERROR {r['arch']} x {r['shape']}: {r.get('error', '')[:120]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV rows. --full uses paper-scale trial
+counts (slow on CPU); the default is a reduced but statistically meaningful
+configuration.
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale trial counts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig1,fig2,lasso,comm,kernels")
+    args = ap.parse_args()
+
+    from . import (bench_comm, bench_fig1_denoising, bench_fig2_methods,
+                   bench_kernels, bench_lasso)
+
+    wanted = set((args.only or "fig1,fig2,lasso,comm,kernels").split(","))
+    print("name,us_per_call,derived")
+    if "fig1" in wanted:
+        bench_fig1_denoising.run(n_trials=1000 if args.full else 20)
+    if "fig2" in wanted:
+        bench_fig2_methods.run(budget=20)
+    if "lasso" in wanted:
+        bench_lasso.run(n_trials=20 if args.full else 4,
+                        n_iters=300 if args.full else 120)
+    if "comm" in wanted:
+        bench_comm.run()
+    if "kernels" in wanted:
+        bench_kernels.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Distributed wavelet-lasso denoising (paper Section VI, Algorithm 3).
+
+Piecewise-smooth field on the 500-sensor network, SGWT with 6 wavelet
+scales, iterative soft thresholding over the Chebyshev-approximate frame.
+With --sharded (and forced host devices) the whole ISTA loop runs inside a
+shard_map over 8 graph shards with ring halo exchanges — the TPU analog of
+the sensors' neighbour messages.
+
+    PYTHONPATH=src python examples/distributed_lasso.py
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/distributed_lasso.py --sharded
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SENSOR500
+from repro.core import distributed as dist
+from repro.core import filters, graph, lasso, wavelets
+from repro.core.multiplier import UnionMultiplier, graph_multiplier
+from repro.data.pipeline import graph_signal_batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sharded", action="store_true")
+    ap.add_argument("--iters", type=int, default=150)
+    args = ap.parse_args()
+
+    p = SENSOR500
+    key = jax.random.PRNGKey(11)
+    g, key = graph.connected_sensor_graph(key, n=p.n_vertices,
+                                          theta=p.theta, kappa=p.kappa)
+    f0 = graph_signal_batch(key, g.coords, "piecewise")
+    key, sub = jax.random.split(key)
+    y = f0 + p.noise_sigma * jax.random.normal(sub, f0.shape)
+    lmax = g.lambda_max_bound()
+    mu = jnp.array([p.lasso_mu_scaling]
+                   + [p.lasso_mu_wavelet] * p.n_wavelet_scales)
+    op = UnionMultiplier(
+        P=g.laplacian(),
+        multipliers=wavelets.sgwt_multipliers(lmax, p.n_wavelet_scales),
+        lmax=lmax, K=p.lasso_K,
+    )
+
+    tik = graph_multiplier(g.laplacian(), filters.tikhonov(p.tau, p.r),
+                           lmax, K=p.K).apply(y)
+
+    if args.sharded:
+        n_dev = len(jax.devices())
+        assert n_dev >= 8, "run with XLA_FLAGS=--xla_force_host_platform_device_count=8"
+        gs, order = graph.spatial_sort(g)
+        parts, leak = dist.partition_banded(np.asarray(gs.laplacian()), 8)
+        print(f"sharded over 8 devices; banded-partition leak={leak}")
+        mesh = jax.make_mesh((8,), ("graph",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        lmax_s = gs.lambda_max_bound()
+        op_s = UnionMultiplier(
+            P=gs.laplacian(),
+            multipliers=wavelets.sgwt_multipliers(lmax_s, p.n_wavelet_scales),
+            lmax=lmax_s, K=p.lasso_K)
+        ypad = dist.pad_signal(y[order], parts)
+        _, y_star = dist.dist_lasso(mesh, parts, ypad, op_s.coeffs, lmax_s,
+                                    mu, gamma=p.lasso_gamma,
+                                    n_iters=args.iters)
+        signal = jnp.zeros_like(y).at[np.asarray(order)].set(
+            y_star[: g.n_vertices])
+    else:
+        res = lasso.distributed_lasso(op, y, mu=mu, gamma=p.lasso_gamma,
+                                      n_iters=args.iters)
+        signal = res.signal
+
+    print(f"MSE noisy    : {float(jnp.mean((y - f0) ** 2)):.4f}  (paper 0.250)")
+    print(f"MSE tikhonov : {float(jnp.mean((tik - f0) ** 2)):.4f}  (paper 0.098)")
+    print(f"MSE lasso    : {float(jnp.mean((signal - f0) ** 2)):.4f}  (paper 0.079)")
+    mc = op.message_counts(g.n_edges)
+    per_iter = mc["gram_messages"] + mc["adjoint_messages"] * op.eta
+    print(f"communication per ISTA iteration ~ {per_iter} scalar messages "
+          f"(scales with |E|={g.n_edges}, independent of N beyond that)")
+
+
+if __name__ == "__main__":
+    main()

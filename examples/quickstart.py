@@ -1,0 +1,52 @@
+"""Quickstart: the paper's Section IV-D experiment end to end.
+
+Builds the 500-sensor random network, observes a noisy smooth field, and
+denoises it with the distributed-ready Chebyshev approximation of the
+Tikhonov multiplier g(lambda) = tau / (tau + 2 lambda^r).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SENSOR500
+from repro.core import filters, graph
+from repro.core.multiplier import graph_multiplier
+from repro.data.pipeline import graph_signal_batch
+
+
+def main():
+    p = SENSOR500
+    key = jax.random.PRNGKey(0)
+    g, key = graph.connected_sensor_graph(key, n=p.n_vertices,
+                                          theta=p.theta, kappa=p.kappa)
+    print(f"sensor network: N={g.n_vertices}, |E|={g.n_edges}")
+
+    f0 = graph_signal_batch(key, g.coords, "smooth")   # h_n = nx^2+ny^2-1
+    key, sub = jax.random.split(key)
+    y = f0 + p.noise_sigma * jax.random.normal(sub, f0.shape)
+
+    lmax = g.lambda_max_bound()
+    print(f"lambda_max bound (Anderson-Morley): {lmax:.2f}")
+    R = graph_multiplier(g.laplacian(), filters.tikhonov(p.tau, p.r),
+                         lmax, K=p.K)
+    denoised = R.apply(y)
+
+    mse_noisy = float(jnp.mean((y - f0) ** 2))
+    mse_den = float(jnp.mean((denoised - f0) ** 2))
+    print(f"Chebyshev order K={p.K}; error bound B(K)*sqrt(eta) = "
+          f"{R.error_bound():.2e}")
+    print(f"MSE noisy    : {mse_noisy:.4f}   (paper avg: 0.250)")
+    print(f"MSE denoised : {mse_den:.4f}   (paper avg: 0.013)")
+    mc = R.union.message_counts(g.n_edges)
+    print(f"communication: {mc['apply_messages']} length-1 messages "
+          f"(= 2K|E|)")
+
+
+if __name__ == "__main__":
+    main()

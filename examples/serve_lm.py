@@ -1,0 +1,23 @@
+"""Batched serving example: prefill + greedy decode with KV caches.
+
+Runs the hybrid (attention + SSM) arch to show the sub-quadratic cache path.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve
+
+
+def main():
+    raise SystemExit(serve.main(
+        ["--arch", "hymba-1.5b", "--smoke", "--batch", "4",
+         "--prompt-len", "16", "--gen", "24"]
+    ))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""End-to-end training driver example (deliverable (b)).
+
+Trains a ~10M-param reduced deepseek-7b for a few hundred steps on CPU with
+checkpointing, then demonstrates the paper-integration: data-parallel
+training where gradient averaging is Chebyshev-polynomial *gossip* on the
+device ring (Algorithm 1 with P = L(device graph)) instead of an all-reduce.
+
+    PYTHONPATH=src python examples/train_lm.py                  # single dev
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/train_lm.py --gossip     # 4-dev DP
+
+Scaling the same driver to the full 7B config on a real pod is
+`python -m repro.launch.train --arch deepseek-7b --steps ...` under a
+(data, model) mesh — the code path is identical.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gossip", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    argv = ["--arch", "deepseek-7b", "--smoke", "--steps", str(args.steps),
+            "--batch", "8", "--seq", "64", "--lr", "1e-3",
+            "--ckpt-dir", "/tmp/repro_train_lm", "--ckpt-every", "50"]
+    if args.gossip:
+        import jax
+        n = len(jax.devices())
+        assert n >= 2, ("gossip DP needs multiple devices: run with "
+                        "XLA_FLAGS=--xla_force_host_platform_device_count=4")
+        argv += ["--dp-mode", "gossip", "--mesh", f"{n}x1"]
+    raise SystemExit(train.main(argv))
+
+
+if __name__ == "__main__":
+    main()

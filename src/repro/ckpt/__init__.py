@@ -1,0 +1,10 @@
+from .checkpoint import (
+    latest_checkpoint,
+    load_checkpoint,
+    restore_arrays,
+    save_checkpoint,
+)
+
+__all__ = [
+    "latest_checkpoint", "load_checkpoint", "restore_arrays", "save_checkpoint",
+]

@@ -1,0 +1,15 @@
+"""deepseek-7b — dense llama-arch [arXiv:2401.02954]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-7b",
+    family="dense",
+    n_layers=30,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=11008,
+    vocab_size=102_400,
+    act="swiglu",
+    norm="rms",
+)

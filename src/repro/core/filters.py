@@ -1,0 +1,110 @@
+"""Multiplier (graph spectral filter) families from Section III of the paper.
+
+Every function here returns a scalar callable g(lambda) suitable for
+`UnionMultiplier` / `cheb_coeffs`. All are vectorized over numpy arrays.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+# -- Section III-A: distributed Tikhonov denoising ---------------------------
+def tikhonov(tau: float, r: int = 1) -> Callable:
+    """Prop. 2: solution of argmin (tau/2)||f-y||^2 + f^T L^r f  is R y with
+    g(lambda) = tau / (tau + 2 lambda^r)."""
+
+    def g(lam):
+        lam = np.asarray(lam, dtype=np.float64)
+        return tau / (tau + 2.0 * np.power(np.maximum(lam, 0.0), r))
+
+    return g
+
+
+# -- Section III-B: distributed smoothing ------------------------------------
+def heat(t: float) -> Callable:
+    """Heat kernel lowpass g(lambda) = exp(-t lambda)."""
+
+    def g(lam):
+        return np.exp(-t * np.asarray(lam, dtype=np.float64))
+
+    return g
+
+
+# -- Section III-C: distributed inverse filtering -----------------------------
+def inverse_filter(g_psi: Callable, tau: float, r: int = 1) -> Callable:
+    """Prop. 3: regularized deconvolution multiplier
+    h(lambda) = tau g_psi(lambda) / (tau g_psi(lambda)^2 + 2 lambda^r)."""
+
+    def h(lam):
+        lam = np.asarray(lam, dtype=np.float64)
+        gp = np.asarray(g_psi(lam), dtype=np.float64)
+        return tau * gp / (tau * gp * gp + 2.0 * np.power(np.maximum(lam, 0.0), r))
+
+    return h
+
+
+# -- Section III-D: semi-supervised classification kernels -------------------
+def ssl_multiplier(h: Callable, tau: float) -> Callable:
+    """Optimal multiplier for argmin tau||f - Y_j||^2 + f^T h(P) f:
+    g(lambda) = tau / (tau + h(lambda))."""
+
+    def g(lam):
+        return tau / (tau + np.asarray(h(lam), dtype=np.float64))
+
+    return g
+
+
+def power_kernel(r: int = 1) -> Callable:
+    """h(lambda) = lambda^r — Tikhonov RKHS (S = L^r or L_norm^r)."""
+
+    def h(lam):
+        return np.power(np.maximum(np.asarray(lam, dtype=np.float64), 0.0), r)
+
+    return h
+
+
+def diffusion_kernel(beta: float) -> Callable:
+    """Smola-Kondor diffusion: S = [exp(-(beta^2/2) L_norm)]^{-1}, i.e.
+    h(lambda) = exp((beta^2/2) lambda)."""
+
+    def h(lam):
+        return np.exp(0.5 * beta * beta * np.asarray(lam, dtype=np.float64))
+
+    return h
+
+
+def inverse_cosine_kernel() -> Callable:
+    """Smola-Kondor inverse cosine: S = [cos(pi lambda / 4)]^{-1} on L_norm,
+    i.e. h(lambda) = 1 / cos(pi lambda / 4) (finite on [0, 2])."""
+
+    def h(lam):
+        return 1.0 / np.cos(np.pi * np.asarray(lam, dtype=np.float64) / 4.0)
+
+    return h
+
+
+def random_walk_kernel(beta: float, r: int) -> Callable:
+    """r-step random walk: S = (beta I - L_norm)^{-r}, beta >= 2,
+    i.e. h(lambda) = (beta - lambda)^{-r}."""
+
+    def h(lam):
+        return np.power(beta - np.asarray(lam, dtype=np.float64), -float(r))
+
+    return h
+
+
+def identity_multiplier() -> Callable:
+    return lambda lam: np.ones_like(np.asarray(lam, dtype=np.float64))
+
+
+# -- Section V-E experiment filters -------------------------------------------
+def fig2_target(h: Callable, tau: float) -> Callable:
+    """The Section V-E forward operator g(lambda) = (tau + h(lambda))/tau,
+    whose inverse g^{-1} = tau/(tau+h) is what the methods compete to apply."""
+
+    def g(lam):
+        return (tau + np.asarray(h(lam), dtype=np.float64)) / tau
+
+    return g

@@ -1,0 +1,115 @@
+"""Jacobi iteration and Chebyshev-accelerated Jacobi (Section V-A / V-B).
+
+Computing R y for a multiplier with g(lambda) != 0 is equivalent to solving
+Q x = y with Q = g(P)^{-1} (Eq. (23)-(24)). With Q = Q_D - Q_O (diagonal /
+off-diagonal split) the Jacobi iteration is
+
+    x^{(t+1)} = Q_D^{-1} Q_O x^{(t)} + Q_D^{-1} y,            (24)
+
+and the Chebyshev-accelerated variant (Saad / Demmel [51, Alg. 6.7]) is
+Eq. (25). Note (paper, Section V-B): the "Chebyshev" here reweights Jacobi
+iterates; it is *not* the polynomial approximation of Section IV.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+MatVec = Callable[[Array], Array]
+
+
+def jacobi_solve(
+    q_matvec: MatVec,
+    q_diag: Array,
+    y: Array,
+    n_iters: int,
+    x0: Array = None,
+    return_history: bool = False,
+):
+    """Jacobi iteration (24) for Q x = y.
+
+    q_matvec: applies the full Q.  q_diag: diagonal of Q (length N).
+    Convergence iff spectral_radius(Q_D^{-1} Q_O) < 1 [50, Thm 4.1]
+    (e.g. Q strictly diagonally dominant).
+    """
+    x = jnp.zeros_like(y) if x0 is None else x0
+    inv_d = 1.0 / q_diag
+
+    def body(x, _):
+        # Q_O x = Q_D x - Q x
+        qo_x = q_diag * x - q_matvec(x)
+        x_new = inv_d * qo_x + inv_d * y
+        return x_new, x_new if return_history else None
+
+    x_final, hist = jax.lax.scan(body, x, None, length=n_iters)
+    if return_history:
+        return x_final, hist
+    return x_final
+
+
+def jacobi_chebyshev_solve(
+    q_matvec: MatVec,
+    q_diag: Array,
+    y: Array,
+    rho: float,
+    n_iters: int,
+    x0: Array = None,
+    return_history: bool = False,
+):
+    """Chebyshev-accelerated Jacobi, Eq. (25).
+
+    rho: upper bound on the spectral radius of Q_D^{-1} Q_O (must be < 1).
+    """
+    inv_d = 1.0 / q_diag
+    x_prev = jnp.zeros_like(y) if x0 is None else x0
+
+    def jac_step(x):
+        return inv_d * (q_diag * x - q_matvec(x)) + inv_d * y
+
+    x = jac_step(x_prev)  # x^{(1)}
+    xi_prev, xi = 1.0, rho
+    history = [x_prev, x]
+
+    def body(carry, _):
+        x, x_prev, xi, xi_prev = carry
+        xi_next = 1.0 / (2.0 / (rho * xi) - 1.0 / xi_prev)
+        w = 2.0 * xi_next / (rho * xi)
+        qo_x = q_diag * x - q_matvec(x)
+        x_next = w * inv_d * qo_x - (xi_next / xi_prev) * x_prev + w * inv_d * y
+        return (x_next, x, xi_next, xi), (x_next if return_history else None)
+
+    (x_final, _, _, _), hist = jax.lax.scan(
+        body, (x, x_prev, jnp.asarray(xi), jnp.asarray(xi_prev)), None,
+        length=max(n_iters - 1, 0),
+    )
+    if return_history:
+        return x_final, hist
+    return x_final
+
+
+def tikhonov_q(P_matvec: MatVec, P_diag: Array, tau: float) -> Tuple[MatVec, Array]:
+    """Q = g(P)^{-1} = (tau I + P)/tau for the SSL multiplier tau/(tau+lambda)
+    (the Zhou et al. iteration (22) is Jacobi on exactly this Q)."""
+
+    def q_mv(x):
+        return (tau * x + P_matvec(x)) / tau
+
+    return q_mv, (tau + P_diag) / tau
+
+
+def power_q(P_matvec: MatVec, P: Array, tau: float, r: int) -> Tuple[MatVec, Array]:
+    """Q = (tau I + P^r)/tau for g(lambda)=tau/(tau+lambda^r). Needs the
+    diagonal of P^r; communication per iteration is r matvecs (Section V-E:
+    'computing W x requires twice the communication' for r = 2)."""
+    Pr = jnp.linalg.matrix_power(P, r)
+
+    def q_mv(x):
+        z = x
+        for _ in range(r):
+            z = P_matvec(z)
+        return (tau * x + z) / tau
+
+    return q_mv, (tau + jnp.diag(Pr)) / tau

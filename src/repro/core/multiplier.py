@@ -1,0 +1,169 @@
+"""Graph multiplier operators and unions thereof (Section II, Definition 1).
+
+`UnionMultiplier` is the user-facing object: built from a PSD matrix P (dense
+or matvec closure), a list of multiplier functions g_j, an upper bound on
+lambda_max, and an approximation order K. It exposes
+
+  .apply(f)        ~ Phi f        (Chebyshev, Algorithm 1)
+  .apply_adjoint(a)~ Phi^* a      (Chebyshev, Algorithm 2)
+  .apply_gram(f)   ~ Phi^*Phi f   (product coefficients, Section IV-C)
+  .exact_apply(f)  = Phi f        (dense eigendecomposition oracle, Eq. (3))
+  .error_bound()   = B(K) sqrt(eta)  (Prop. 4)
+
+The exact oracle is O(N^3) and exists for validation at paper scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+from typing import Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import chebyshev as cheb
+
+Array = jax.Array
+
+
+def _as_matvec(P: Union[Array, Callable[[Array], Array]]):
+    if callable(P):
+        return P
+    Pm = jnp.asarray(P)
+
+    def mv(x: Array) -> Array:
+        return Pm @ x
+
+    return mv
+
+
+@dataclasses.dataclass(frozen=True)
+class UnionMultiplier:
+    """Union of eta graph multiplier operators w.r.t. a PSD matrix P."""
+
+    P: Union[Array, Callable[[Array], Array]]
+    multipliers: Sequence[Callable]
+    lmax: float
+    K: int = 20
+    coeff_points: int = 1000
+
+    @property
+    def eta(self) -> int:
+        return len(self.multipliers)
+
+    @cached_property
+    def coeffs(self) -> np.ndarray:
+        return cheb.cheb_coeffs_stack(
+            self.multipliers, self.K, self.lmax, self.coeff_points
+        )
+
+    @cached_property
+    def matvec(self):
+        return _as_matvec(self.P)
+
+    # -- Chebyshev-approximate applications ---------------------------------
+    def apply(self, f: Array) -> Array:
+        """Phi_tilde f; shape (eta,) + f.shape (or f.shape when eta == 1 and
+        a single multiplier was given as a 1-element list the caller can
+        squeeze)."""
+        out = cheb.cheb_apply(
+            self.matvec, f, jnp.asarray(self.coeffs, f.dtype), self.lmax
+        )
+        return out
+
+    def apply_adjoint(self, a: Array) -> Array:
+        return cheb.cheb_apply_adjoint(
+            self.matvec, a, jnp.asarray(self.coeffs, a.dtype), self.lmax
+        )
+
+    def apply_gram(self, f: Array) -> Array:
+        return cheb.cheb_apply_gram(self.matvec, f, self.coeffs, self.lmax)
+
+    # -- Exact oracle ---------------------------------------------------------
+    @cached_property
+    def _eig(self):
+        if callable(self.P):
+            raise ValueError("exact oracle needs a dense P")
+        lam, U = jnp.linalg.eigh(jnp.asarray(self.P))
+        return lam, U
+
+    def exact_apply(self, f: Array) -> Array:
+        """Phi f by Eq. (3) — dense eigendecomposition, validation only."""
+        lam, U = self._eig
+        fhat = U.T @ f
+        outs = []
+        for g in self.multipliers:
+            glam = jnp.asarray(g(np.asarray(lam)), dtype=f.dtype)
+            outs.append(U @ (glam[:, None] * fhat if fhat.ndim == 2 else glam * fhat))
+        return jnp.stack(outs, axis=0)
+
+    def exact_apply_adjoint(self, a: Array) -> Array:
+        lam, U = self._eig
+        acc = None
+        for j, g in enumerate(self.multipliers):
+            glam = jnp.asarray(g(np.asarray(lam)), dtype=a.dtype)
+            ahat = U.T @ a[j]
+            term = U @ (glam[:, None] * ahat if ahat.ndim == 2 else glam * ahat)
+            acc = term if acc is None else acc + term
+        return acc
+
+    # -- Error bound (Prop. 4) -------------------------------------------------
+    def B(self) -> float:
+        return cheb.approx_error_bound(self.multipliers, self.coeffs, self.lmax)
+
+    def error_bound(self) -> float:
+        """Prop. 4: ||Phi - Phi_tilde||_2 <= B(K) sqrt(eta)."""
+        return self.B() * float(np.sqrt(self.eta))
+
+    # -- Communication model (Section IV-B/C) ---------------------------------
+    def message_counts(self, n_edges: int) -> dict:
+        """The paper's communication accounting for one application."""
+        return {
+            "apply_messages": 2 * self.K * n_edges,
+            "apply_message_len": 1,
+            "adjoint_messages": 2 * self.K * n_edges,
+            "adjoint_message_len": self.eta,
+            "gram_messages": 4 * self.K * n_edges,
+            "gram_message_len": 1,
+        }
+
+
+def graph_multiplier(
+    P: Union[Array, Callable],
+    g: Callable,
+    lmax: float,
+    K: int = 20,
+    coeff_points: int = 1000,
+) -> "ScalarMultiplier":
+    return ScalarMultiplier(
+        UnionMultiplier(P=P, multipliers=[g], lmax=lmax, K=K, coeff_points=coeff_points)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalarMultiplier:
+    """Single graph multiplier operator — squeezes the union axis."""
+
+    union: UnionMultiplier
+
+    def apply(self, f: Array) -> Array:
+        return self.union.apply(f)[0]
+
+    def exact_apply(self, f: Array) -> Array:
+        return self.union.exact_apply(f)[0]
+
+    def error_bound(self) -> float:
+        return self.union.error_bound()
+
+    @property
+    def coeffs(self) -> np.ndarray:
+        return self.union.coeffs[0]
+
+    @property
+    def K(self) -> int:
+        return self.union.K
+
+    @property
+    def lmax(self) -> float:
+        return self.union.lmax

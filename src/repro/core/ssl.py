@@ -1,0 +1,68 @@
+"""Distributed semi-supervised / transductive classification (Section III-D).
+
+Implements the 4-step recipe at the end of Section III-D: build the label
+matrix Y, apply the optimal multiplier R (g(lambda) = tau/(tau + h(lambda)))
+to each class column in a distributed-ready way (single union application on
+the (N, kappa) matrix — the Chebyshev recurrence is linear so all classes
+share the K communication rounds), then argmax per node.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import filters
+from .multiplier import graph_multiplier, ScalarMultiplier
+
+Array = jax.Array
+
+
+def label_matrix(labels: Array, mask: Array, n_classes: int) -> Array:
+    """Y in R^{N x kappa}: Y_ij = 1 iff node i is labeled (mask) with class j."""
+    onehot = jax.nn.one_hot(labels, n_classes, dtype=jnp.float32)
+    return onehot * mask[:, None].astype(jnp.float32)
+
+
+@dataclasses.dataclass
+class SSLResult:
+    scores: Array        # F^opt, (N, kappa)
+    predictions: Array   # argmax_j F^opt_{nj}, (N,)
+
+
+def semi_supervised_classify(
+    P: Array,
+    labels: Array,
+    labeled_mask: Array,
+    n_classes: int,
+    h: Optional[Callable] = None,
+    tau: float = 1.0,
+    lmax: Optional[float] = None,
+    K: int = 20,
+) -> SSLResult:
+    """Steps 1-4 of Section III-D.
+
+    P: PSD matrix with the graph's sparsity pattern (L, L_norm, or K-scaling).
+    h: RKHS kernel spectral function (default: identity, i.e. S = P).
+    """
+    if lmax is None:
+        lam = jnp.linalg.eigvalsh(P)
+        lmax = float(lam[-1]) * 1.01
+    h = h or filters.power_kernel(1)
+    g = filters.ssl_multiplier(h, tau)
+    R: ScalarMultiplier = graph_multiplier(P, g, lmax=lmax, K=K)
+    Y = label_matrix(labels, labeled_mask, n_classes)  # (N, kappa)
+    # One union application on the matrix signal: the Chebyshev recurrence
+    # (Algorithm 1) runs once with length-kappa messages.
+    F = R.apply(Y)
+    return SSLResult(scores=F, predictions=jnp.argmax(F, axis=1))
+
+
+def accuracy(result: SSLResult, labels: Array, labeled_mask: Array) -> float:
+    """Accuracy over the unlabeled nodes."""
+    unl = ~labeled_mask
+    correct = (result.predictions == labels) & unl
+    return float(jnp.sum(correct) / jnp.maximum(jnp.sum(unl), 1))

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLMData, graph_signal_batch
+
+__all__ = ["SyntheticLMData", "graph_signal_batch"]

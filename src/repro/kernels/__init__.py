@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles."""
+from . import ops, ref
+from .bcsr_spmv import block_ell_spmv
+from .cheb_step import cheb_step
+from .flash_attention import flash_attention
+from .soft_threshold import ista_shrink
+
+__all__ = [
+    "ops", "ref", "block_ell_spmv", "cheb_step", "flash_attention",
+    "ista_shrink",
+]

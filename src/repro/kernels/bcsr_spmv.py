@@ -1,0 +1,73 @@
+"""Block-ELL sparse matvec Pallas kernel — the Algorithm 1 hot loop on TPU.
+
+The paper's per-Chebyshev-order cost is one sparse matvec with P (cost
+proportional to |E|, Section IV-A). On TPU we store P in Block-ELL
+(`core.graph.BlockELL`): every 8-row block keeps a fixed number of
+(8 x 128) column-block slots, so the kernel is fully static and each slot
+contributes one MXU-shaped (8,128)x(128,) product.
+
+Grid: (n_row_blocks, max_slots); the slot axis is innermost so the output
+row block is revisited and accumulated in VMEM. Column-block indices are
+scalar-prefetched so the x BlockSpec can gather the right 128-slice of x
+from HBM per slot.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _spmv_kernel(idx_ref, blocks_ref, x_ref, y_ref):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    blk = blocks_ref[0, 0]          # (br, bc)
+    xb = x_ref[0]                   # (bc,)
+    y_ref[0, :] += jnp.dot(blk, xb, preferred_element_type=jnp.float32).astype(
+        y_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_ell_spmv(
+    blocks: Array,
+    indices: Array,
+    x: Array,
+    *,
+    interpret: bool = False,
+) -> Array:
+    """y = A @ x for Block-ELL A.
+
+    blocks:  (nrb, slots, br, bc) — padded slots must be zero blocks.
+    indices: (nrb, slots) int32 column-block index per slot.
+    x:       (nrb_cols * bc,) padded dense vector.
+    Returns (nrb * br,).
+    """
+    nrb, slots, br, bc = blocks.shape
+    x2 = x.reshape(-1, bc)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nrb, slots),
+        in_specs=[
+            pl.BlockSpec((1, 1, br, bc), lambda i, s, idx: (i, s, 0, 0)),
+            pl.BlockSpec((1, bc), lambda i, s, idx: (idx[i, s], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, br), lambda i, s, idx: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _spmv_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrb, br), x.dtype),
+        interpret=interpret,
+    )(indices, blocks, x2)
+    return out.reshape(nrb * br)

@@ -1,0 +1,85 @@
+"""Fused Chebyshev recurrence step Pallas kernel.
+
+One order of Algorithm 1 after the sparse matvec `pt = P @ t_{k-1}`:
+
+    t_k   = (2/alpha) * pt - 2 * t_{k-1} - t_{k-2}      (line 9)
+    acc_j += c_{j,k} * t_k   for every multiplier j       (line 12 running sum)
+
+Fusing the AXPYs keeps the iterate traffic at one HBM round-trip per order
+instead of four (the memory-bound part of the recurrence; see EXPERIMENTS.md
+§Perf for the accounting).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+_BLOCK = 1024
+
+
+def pick_block(n: int, maximum: int = _BLOCK) -> int:
+    """Largest 128-multiple block size <= maximum that divides n."""
+    for b in range(min(maximum, n), 127, -128):
+        if n % b == 0 and b % 128 == 0:
+            return b
+    raise ValueError(f"pad n (={n}) to a multiple of 128")
+
+
+def _cheb_step_kernel(coef_ref, pt_ref, t1_ref, t2_ref, acc_ref,
+                      tk_out_ref, acc_out_ref, *, two_over_alpha):
+    pt = pt_ref[...]
+    t1 = t1_ref[...]
+    t2 = t2_ref[...]
+    tk = two_over_alpha * pt - 2.0 * t1 - t2
+    tk_out_ref[...] = tk
+    # coef_ref: (eta, 1) broadcast against tk (block,)
+    acc_out_ref[...] = acc_ref[...] + coef_ref[...] * tk[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "interpret"))
+def cheb_step(
+    pt: Array,
+    t_km1: Array,
+    t_km2: Array,
+    acc: Array,
+    coef: Array,
+    *,
+    alpha: float,
+    interpret: bool = False,
+):
+    """Returns (t_k, acc + outer(coef, t_k)).
+
+    pt, t_km1, t_km2: (n,) with n a multiple of the 1024 tile.
+    acc: (eta, n); coef: (eta,).
+    """
+    n = pt.shape[0]
+    eta = acc.shape[0]
+    blk = pick_block(n)
+    grid = (n // blk,)
+    kernel = functools.partial(_cheb_step_kernel, two_over_alpha=2.0 / alpha)
+    tk, acc_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((eta, 1), lambda i: (0, 0)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((eta, blk), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((eta, blk), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), pt.dtype),
+            jax.ShapeDtypeStruct((eta, n), acc.dtype),
+        ],
+        interpret=interpret,
+    )(coef[:, None], pt, t_km1, t_km2, acc)
+    return tk, acc_out

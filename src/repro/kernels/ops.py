@@ -1,0 +1,130 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU the Pallas kernels run natively; on CPU (this
+container) `use_pallas=True` runs them under interpret=True (the kernel body
+executed in Python — used by the kernel test sweeps), and the default takes
+the pure-jnp reference path so smoke tests and benchmarks stay fast.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import BlockELL
+from . import ref
+from .bcsr_spmv import block_ell_spmv
+from .cheb_step import cheb_step
+from .flash_attention import flash_attention as _flash
+from .soft_threshold import ista_shrink
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(use_pallas: Optional[bool]):
+    """Returns (use_pallas, interpret)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    return use_pallas, (use_pallas and not _on_tpu())
+
+
+def spmv(A: BlockELL, x: Array, use_pallas: Optional[bool] = None) -> Array:
+    """Block-ELL y = A @ x on the padded vector (padded_n,)."""
+    use, interp = _resolve(use_pallas)
+    if use:
+        return block_ell_spmv(A.blocks, A.indices, x, interpret=interp)
+    return ref.block_ell_spmv_ref(A.blocks, A.indices, x)
+
+
+def fused_cheb_apply(
+    A: BlockELL,
+    x: Array,
+    coeffs: Union[Array, np.ndarray],
+    lmax: float,
+    use_pallas: Optional[bool] = None,
+) -> Array:
+    """Phi_tilde x with the SpMV + fused-step kernels (Algorithm 1 on TPU).
+
+    x: (padded_n,) — padded_n must be a multiple of 1024 for the fused
+    elementwise kernel (use `pad_for_kernels`). Returns (eta, padded_n).
+    """
+    use, interp = _resolve(use_pallas)
+    c = jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype))
+    eta, Kp1 = c.shape
+    K = Kp1 - 1
+    alpha = float(lmax) / 2.0
+
+    def mv(t):
+        return spmv(A, t, use_pallas=use_pallas)
+
+    t0 = x
+    acc = 0.5 * c[:, 0:1] * x[None, :]
+    if K == 0:
+        return acc
+    t1 = mv(x) / alpha - x
+    acc = acc + c[:, 1:2] * t1[None, :]
+    if K == 1:
+        return acc
+
+    def body(carry, ck):
+        t_km1, t_km2, acc = carry
+        pt = mv(t_km1)
+        if use:
+            tk, acc = cheb_step(pt, t_km1, t_km2, acc, ck,
+                                alpha=alpha, interpret=interp)
+        else:
+            tk, acc = ref.cheb_step_ref(pt, t_km1, t_km2, acc, ck, alpha=alpha)
+        return (tk, t_km1, acc), None
+
+    (_, _, acc), _ = jax.lax.scan(body, (t1, t0, acc), c[:, 2:].T)
+    return acc
+
+
+def flash_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    use_pallas: Optional[bool] = None,
+) -> Array:
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _flash(q, k, v, causal=causal, scale=scale,
+                      block_q=block_q, block_k=block_k, interpret=interp)
+    return ref.attention_ref(q, k, v, causal=causal, scale=scale)
+
+
+def ista_update(
+    a: Array,
+    phi_y: Array,
+    gram_a: Array,
+    thresh: Array,
+    gamma: float,
+    use_pallas: Optional[bool] = None,
+) -> Array:
+    use, interp = _resolve(use_pallas)
+    if thresh.ndim == 1:
+        thresh = thresh[:, None]
+    if use:
+        return ista_shrink(a, phi_y, gram_a, thresh, gamma=gamma,
+                           interpret=interp)
+    return ref.ista_shrink_ref(a, phi_y, gram_a, thresh, gamma=gamma)
+
+
+def pad_for_kernels(x: Array, multiple: int = 1024) -> Array:
+    n = x.shape[-1]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def block_ell_spmv_ref(blocks: Array, indices: Array, x: Array) -> Array:
+    """y = A @ x; blocks (nrb, slots, br, bc), indices (nrb, slots),
+    x (ncb*bc,). Padded slots must hold zero blocks."""
+    nrb, slots, br, bc = blocks.shape
+    xb = x.reshape(-1, bc)
+    gathered = xb[indices]  # (nrb, slots, bc)
+    y = jnp.einsum("rsij,rsj->ri", blocks, gathered)
+    return y.reshape(nrb * br)
+
+
+def cheb_step_ref(pt: Array, t_km1: Array, t_km2: Array, acc: Array,
+                  coef: Array, *, alpha: float):
+    tk = (2.0 / alpha) * pt - 2.0 * t_km1 - t_km2
+    return tk, acc + coef[:, None] * tk[None, :]
+
+
+def ista_shrink_ref(a: Array, phi_y: Array, gram_a: Array, thresh: Array,
+                    *, gamma: float) -> Array:
+    z = a + gamma * (phi_y - gram_a)
+    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - thresh, 0.0)
+
+
+def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                  scale: float | None = None) -> Array:
+    """Naive softmax attention with GQA; q (B,Hq,Sq,D), k/v (B,Hkv,Sk,D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if causal:
+        rows = jnp.arange(sq)[:, None]
+        cols = jnp.arange(sk)[None, :]
+        s = jnp.where(cols <= rows, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

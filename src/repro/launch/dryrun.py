@@ -1,0 +1,393 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + \
+    os.environ.get("XLA_FLAGS", "")
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract memory / cost / collective analyses.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+      --shape train_4k [--multipod] [--scheme default] [--out out.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod]
+
+The first two lines of this file force 512 host platform devices BEFORE any
+jax import — smoke tests and benchmarks (which import other modules) still
+see 1 device.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import dataclasses
+
+from ..configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from ..dist.sharding import make_rules
+from ..models import decode as dec
+from ..models import model as mmodel
+from ..models import params as mparams
+from ..models.model import RunConfig, forward
+from ..models.steps import build_serve_step, build_train_step
+from ..optim.adamw import AdamWState, adamw_init
+from . import inputs as inp
+from .mesh import make_production_mesh
+from .roofline import Roofline, collective_stats, model_flops
+
+
+def _ns(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree (P is itself a pytree node,
+    so guard with is_leaf)."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _fit_one(shape, spec: P, mesh) -> P:
+    """Trim a PartitionSpec so every dim divides evenly (jit rejects uneven
+    input shardings): drop trailing mesh axes per dim until divisible."""
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    ndim = len(shape.shape) if hasattr(shape, "shape") else len(shape)
+    dims = shape.shape if hasattr(shape, "shape") else shape
+    entries = list(spec) + [None] * (ndim - len(spec))
+    out = []
+    for d, e in zip(dims, entries[:ndim]):
+        if e is None:
+            out.append(None)
+            continue
+        axes = (e,) if isinstance(e, str) else tuple(e)
+        while axes:
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            if d % total == 0:
+                break
+            axes = axes[:-1]
+        out.append(axes[0] if len(axes) == 1 else (tuple(axes) if axes else None))
+    return P(*out)
+
+
+def _fit(shape_tree, spec_tree, mesh):
+    """Apply _fit_one leaf-wise (specs tree must match shapes tree)."""
+    flat_shapes, treedef = jax.tree_util.tree_flatten(shape_tree)
+    flat_specs = treedef.flatten_up_to(spec_tree)
+    fitted = [_fit_one(sh, sp, mesh) for sh, sp in zip(flat_shapes, flat_specs)]
+    return jax.tree_util.tree_unflatten(treedef, fitted)
+
+
+def _mem_dict(compiled) -> Dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        m = None
+    if m is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["total_hbm_bytes"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+        )
+    return out
+
+
+def _layer_cost(cfg, rules, run, shape, mesh, encoder: bool = False) -> Dict:
+    """Compile ONE transformer layer's fwd+bwd with the cell's shardings and
+    return its per-device flops / bytes / collective bytes.
+
+    Used by the hybrid train accounting: the full train step is lowered with
+    the layer *scan* (fast compile, correct memory analysis), whose while
+    body XLA cost_analysis counts once; this per-layer cost times (L-1)
+    recovers the exact totals. Inner attention-chunk scans are unrolled here
+    so they are counted exactly."""
+    B = shape.global_batch
+    S = cfg.encoder_seq if encoder else shape.seq_len
+    dt = cfg.jnp_dtype
+    d = cfg.d_model
+    run_l = dataclasses.replace(run, unroll_layers=True,
+                                attn_chunk=max(run.attn_chunk, S // 8))
+    metas = mparams.abstract_params(cfg)
+    lmetas = metas["encoder"]["layers"] if encoder else metas["layers"]
+    lp_sds = {k: jax.ShapeDtypeStruct(m.shape[1:], dt) for k, m in lmetas.items()}
+    lp_specs = {k: rules.spec(*m.axes[1:]) for k, m in lmetas.items()}
+    x_sds = jax.ShapeDtypeStruct((B, S, d), dt)
+    x_spec = rules.spec("batch", "frames" if encoder else "seq", "embed")
+    arg_shapes = [x_sds, lp_sds, x_sds]
+    arg_specs = [x_spec, lp_specs, x_spec]
+    if cfg.is_encoder_decoder and not encoder:
+        arg_shapes.append(jax.ShapeDtypeStruct((B, cfg.encoder_seq, d), dt))
+        arg_specs.append(rules.spec("batch", "frames", "embed"))
+
+    def f(x, lp, ct, enc_out=None):
+        if encoder:
+            blk = mmodel._make_encoder_block(cfg, rules, run_l)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+            blk = mmodel._make_block(cfg, rules, run_l, positions, enc_out)
+        blk = mmodel._maybe_remat(blk, run)
+        y, vjp = jax.vjp(blk, x, lp)
+        dx, dlp = vjp(ct)
+        return y, dx, dlp
+
+    fitted = _fit(tuple(arg_shapes), tuple(arg_specs), mesh)
+    jitted = jax.jit(f, in_shardings=_ns(mesh, fitted))
+    compiled = jitted.lower(*arg_shapes).compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_stats(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll["collective_bytes_per_device"],
+        "collective_bytes_bf16": coll["collective_bytes_bf16_corrected"],
+    }
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    scheme: str = "default",
+    run_cfg: Optional[RunConfig] = None,
+    kv_dtype: Optional[str] = None,
+    dump_collectives: int = 0,
+) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_chips = 512 if multi_pod else 256
+    record: Dict = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips,
+        "scheme": scheme,
+    }
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        record.update({"status": "skipped", "reason": why})
+        return record
+
+    if run_cfg is None:
+        run_cfg = RunConfig(attn_impl="chunked", attn_chunk=512,
+                            remat="dots", scheme=scheme)
+    prefill_last_only = getattr(run_cfg, "_prefill_last_only", False)
+    run = dataclasses.replace(
+        run_cfg,
+        unroll_layers=(shape.kind != "train"),
+        attn_chunk=(max(run_cfg.attn_chunk, shape.seq_len // 8)
+                    if shape.kind == "prefill" else run_cfg.attn_chunk),
+        # dispatch groups can't exceed the batch's shardable width — a
+        # group count above it misaligns with the trimmed batch sharding
+        # and GSPMD falls back to replicated dispatch buffers (measured:
+        # 654 s vs 46 s collective on deepseek-v2 multi-pod train).
+        moe_groups=max(1, min(run_cfg.moe_groups, shape.global_batch)),
+    )
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh, scheme)
+    pshapes = mparams.param_shapes(cfg)
+    pspecs = mparams.param_pspecs(cfg, rules)
+    kvdt = {"f8": jnp.float8_e4m3fn, None: None, "model": None}[kv_dtype]
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            step = build_train_step(cfg, rules, run)
+            opt_shapes = jax.eval_shape(adamw_init, pshapes)
+            arg_shapes = (pshapes, opt_shapes, inp.batch_specs(cfg, shape))
+            arg_specs = (pspecs, AdamWState(step=P(), m=pspecs, v=pspecs),
+                         inp.batch_pspecs(cfg, rules))
+            out_specs = (arg_specs[0], arg_specs[1],
+                         {"loss": P(), "grad_norm": P(), "step": P()})
+        elif shape.kind == "prefill":
+            def step(params, batch):
+                logits = forward(
+                    cfg, params, batch["tokens"], rules, run,
+                    vision_embeds=batch.get("vision_embeds"),
+                    encoder_frames=batch.get("encoder_frames"),
+                )
+                if prefill_last_only:
+                    return logits[:, -1:]
+                return logits
+            bspecs = {k: v for k, v in inp.batch_pspecs(cfg, rules).items()
+                      if k != "labels"}
+            bshapes = {k: v for k, v in inp.batch_specs(cfg, shape).items()
+                       if k != "labels"}
+            arg_shapes = (pshapes, bshapes)
+            arg_specs = (pspecs, bspecs)
+            out_specs = rules.spec("batch", "seq", "vocab")
+        else:  # decode
+            step = build_serve_step(cfg, rules, run)
+            cache_shapes, tok_shape = inp.decode_specs(cfg, shape, kvdt)
+            cache_specs = dec.cache_pspecs(cfg, rules)
+            arg_shapes = (pshapes, cache_shapes, tok_shape)
+            arg_specs = (pspecs, cache_specs, rules.spec("batch", None))
+            out_specs = (rules.spec("batch"), cache_specs)
+
+        arg_specs = _fit(arg_shapes, arg_specs, mesh)
+        out_shapes = jax.eval_shape(step, *arg_shapes)
+        out_specs = _fit(out_shapes, out_specs, mesh)
+        jitted = jax.jit(step, in_shardings=_ns(mesh, arg_specs),
+                         out_shardings=_ns(mesh, out_specs))
+        lowered = jitted.lower(*arg_shapes)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_stats(compiled.as_text(), top_k=dump_collectives)
+    layer_costs = {}
+    if shape.kind == "train":
+        # hybrid accounting: add (L-1) x per-layer cost (scan body counted
+        # once by cost_analysis) — see _layer_cost.
+        with mesh:
+            lc = _layer_cost(cfg, rules, run, shape, mesh)
+            layer_costs["decoder"] = lc
+            flops += (cfg.n_layers - 1) * lc["flops"]
+            byts += (cfg.n_layers - 1) * lc["bytes"]
+            coll["collective_bytes_per_device"] += (
+                (cfg.n_layers - 1) * lc["collective_bytes"])
+            coll["collective_bytes_bf16_corrected"] += (
+                (cfg.n_layers - 1) * lc["collective_bytes_bf16"])
+            if cfg.is_encoder_decoder:
+                ec = _layer_cost(cfg, rules, run, shape, mesh, encoder=True)
+                layer_costs["encoder"] = ec
+                flops += (cfg.n_encoder_layers - 1) * ec["flops"]
+                byts += (cfg.n_encoder_layers - 1) * ec["bytes"]
+                coll["collective_bytes_per_device"] += (
+                    (cfg.n_encoder_layers - 1) * ec["collective_bytes"])
+                coll["collective_bytes_bf16_corrected"] += (
+                    (cfg.n_encoder_layers - 1) * ec["collective_bytes_bf16"])
+    mem = _mem_dict(compiled)
+    struct_bytes = None
+    if mem:
+        struct_bytes = float(
+            mem.get("argument_size_in_bytes", 0)
+            + mem.get("output_size_in_bytes", 0)
+            + 2 * mem.get("temp_size_in_bytes", 0)
+        )
+    rf = Roofline(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=coll["collective_bytes_per_device"],
+        struct_bytes_per_device=struct_bytes,
+    )
+    mf = model_flops(cfg, shape, n_chips)
+    hlo_flops_global = flops * n_chips
+    record["collective_s_bf16_corrected"] = (
+        coll["collective_bytes_bf16_corrected"] / 50e9)
+    record.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "cost": {k: cost[k] for k in ("flops", "bytes accessed")
+                 if k in cost},
+        "collectives": coll,
+        "layer_costs": layer_costs,
+        "roofline": rf.to_dict(),
+        "model_flops": mf,
+        "fits_hbm_16g": (mem.get("total_hbm_bytes", 0) <= 16e9) if mem else None,
+        "useful_flops_ratio": (
+            mf["model_flops"] / hlo_flops_global if hlo_flops_global else None
+        ),
+    })
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--scheme", default="default")
+    ap.add_argument("--kv-dtype", choices=["model", "f8"], default=None)
+    ap.add_argument("--attn-impl", default="chunked")
+    ap.add_argument("--attn-chunk", type=int, default=512)
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--moe-capacity", type=float, default=None)
+    ap.add_argument("--moe-dispatch", choices=["global_sort", "grouped"],
+                    default="global_sort")
+    ap.add_argument("--moe-groups", type=int, default=None)
+    ap.add_argument("--attn-remat", action="store_true")
+    ap.add_argument("--no-qkv-constraints", action="store_true")
+    ap.add_argument("--dump-collectives", type=int, default=0,
+                    help="record the top-N largest collectives per cell")
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="keep the layer scan (faster compile, approximate "
+                         "FLOP/collective accounting)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    # dispatch groups = number of DP shards of the token stream
+    if args.moe_groups:
+        groups = args.moe_groups
+    elif args.scheme in ("fsdp", "fsdp_noep"):
+        groups = 512 if args.multipod else 256
+    else:
+        groups = 32 if args.multipod else 16
+    run = RunConfig(attn_impl=args.attn_impl, attn_chunk=args.attn_chunk,
+                    remat=args.remat, scheme=args.scheme,
+                    moe_capacity_factor=args.moe_capacity,
+                    moe_dispatch=args.moe_dispatch,
+                    moe_groups=groups,
+                    attn_remat=args.attn_remat,
+                    qkv_constraints=not args.no_qkv_constraints,
+                    unroll_layers=not args.no_unroll)
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    records = []
+    for arch, shape in cells:
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multipod,
+                           scheme=args.scheme, run_cfg=run,
+                           kv_dtype=args.kv_dtype,
+                           dump_collectives=args.dump_collectives)
+        except Exception as e:  # noqa: BLE001 — record the failure, keep going
+            rec = {"arch": arch, "shape": shape, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        records.append(rec)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f"dom={r['dominant']} comp={r['compute_s']:.4f}s "
+                     f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s "
+                     f"compile={rec['compile_s']:.0f}s")
+        elif status == "skipped":
+            extra = rec["reason"][:60]
+        else:
+            extra = rec["error"][:120]
+        print(f"[dryrun] {arch} x {shape} ({rec.get('mesh', '')}): "
+              f"{status} {extra}", flush=True)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+    bad = [r for r in records if r["status"] == "error"]
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

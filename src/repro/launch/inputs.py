@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+`input_specs` returns weak-type-correct, shardable stand-ins (no device
+allocation): token batches for train/prefill, token + KV-cache trees for
+decode. Modality frontends are stubs — whisper gets precomputed frame
+embeddings, qwen2-vl gets patch embeddings (DESIGN.md §4)."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..dist.sharding import ShardingRules
+from ..models import decode as dec
+
+Array = jax.Array
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.jnp_dtype
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_vision_tokens, cfg.d_model), dt)
+    if cfg.is_encoder_decoder:
+        specs["encoder_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), dt)
+    return specs
+
+
+def batch_pspecs(cfg: ModelConfig, rules: ShardingRules) -> Dict:
+    specs = {
+        "tokens": rules.spec("batch", "seq"),
+        "labels": rules.spec("batch", "seq"),
+    }
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = rules.spec("batch", None, "embed")
+    if cfg.is_encoder_decoder:
+        specs["encoder_frames"] = rules.spec("batch", "frames", "embed")
+    return specs
+
+
+def decode_specs(
+    cfg: ModelConfig, shape: ShapeSpec, kv_dtype=None
+) -> Tuple[Dict, jax.ShapeDtypeStruct]:
+    """(cache ShapeDtypeStruct tree, tokens (B,1))."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        functools.partial(dec.init_cache, cfg, B, S, dtype=kv_dtype)
+    )
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return cache, tokens
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, kv_dtype=None) -> Dict:
+    """All model inputs for a cell, keyed by step-function argument."""
+    if shape.is_decode:
+        cache, tokens = decode_specs(cfg, shape, kv_dtype)
+        return {"cache": cache, "tokens": tokens}
+    return {"batch": batch_specs(cfg, shape)}

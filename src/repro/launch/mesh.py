@@ -1,0 +1,39 @@
+"""Production mesh construction (kept as functions — importing this module
+never touches jax device state)."""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips. Multi-pod: 2 pods x 256.
+
+    The 'pod' axis is the slow (DCN) dimension: only batch is sharded over
+    it, so cross-pod traffic is gradient all-reduce only.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh needs {n} devices, have {len(devices)} — the dry-run must "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax"
+        )
+    return jax.make_mesh(
+        shape, axes, devices=devices,
+        axis_types=(AxisType.Auto,) * len(axes),
+    )
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CI-scale multi-device tests."""
+    n = math.prod(shape)
+    return jax.make_mesh(
+        shape, axes, devices=jax.devices()[:n],
+        axis_types=(AxisType.Auto,) * len(axes),
+    )

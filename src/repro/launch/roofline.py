@@ -1,0 +1,178 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Terms (per §Roofline in EXPERIMENTS.md), for TPU v5e:
+    compute    = HLO_FLOPs_per_device / 197e12 FLOP/s (bf16)
+    memory     = HLO_bytes_per_device / 819e9 B/s HBM
+    collective = collective_bytes_per_device / 50e9 B/s ICI
+
+Post-SPMD HLO shapes are per-device shards, so cost_analysis() and the
+collective scan below are already per-device; multiplying by the chip count
+recovers the global quantities of the §Roofline formulas (they divide by
+chips, so the two conventions agree).
+
+Collective bytes are summed from the optimized HLO text: for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+the *result* buffer bytes count once, except all-reduce which counts twice
+(ring reduce-scatter + all-gather). This is the standard ring-collective
+traffic model; replica-group size corrections ((g-1)/g) are ignored
+(<7% at g=16).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9          # B/s per chip
+ICI_BW = 50e9           # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<type>[^=]*?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(",
+)
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str, top_k: int = 0) -> Dict:
+    """Per-device collective traffic from optimized (post-SPMD) HLO text.
+    top_k > 0 additionally returns the largest individual collectives
+    (op, bytes, result type) for §Perf diagnosis."""
+    bytes_by_op: Dict[str, int] = {op: 0 for op in _COLLECTIVES}
+    count_by_op: Dict[str, int] = {op: 0 for op in _COLLECTIVES}
+    f32_ar_bytes = 0
+    items = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if line.lstrip().startswith("%") and "-done" in line.split("=")[0]:
+            continue  # async -done repeats the -start result type
+        b = _type_bytes(m.group("type"))
+        mult = 2 if op == "all-reduce" else 1
+        bytes_by_op[op] += b * mult
+        count_by_op[op] += 1
+        # XLA:CPU promotes bf16 all-reduces to f32 (FloatSupport); on TPU
+        # they stay bf16. Track the f32-AR share so a TPU-corrected total
+        # (f32 ARs counted at bf16 width) can be reported alongside.
+        if op == "all-reduce" and "f32[" in m.group("type"):
+            f32_ar_bytes += b * mult
+        if top_k:
+            items.append((b * mult, op, m.group("type").strip()[:90]))
+    total = sum(bytes_by_op.values())
+    out = {
+        "collective_bytes_per_device": total,
+        "collective_bytes_bf16_corrected": total - f32_ar_bytes // 2,
+        "bytes_by_op": bytes_by_op,
+        "count_by_op": count_by_op,
+    }
+    if top_k:
+        items.sort(reverse=True)
+        out["top_collectives"] = [
+            {"bytes": b, "op": op, "type": t} for b, op, t in items[:top_k]
+        ]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    # Structural HBM-traffic estimate: args + outputs + 2*temps (each temp
+    # written once and read once). The raw cost_analysis 'bytes accessed' on
+    # the CPU backend counts every unfused op's operands and overstates TPU
+    # traffic; both are reported, the structural one drives optimization.
+    struct_bytes_per_device: Optional[float] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def memory_struct_s(self) -> Optional[float]:
+        if self.struct_bytes_per_device is None:
+            return None
+        return self.struct_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower bound assuming perfect overlap: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def compute_fraction(self) -> float:
+        """Roofline fraction: useful-compute share of the bound step time.
+        1.0 = compute-bound at peak."""
+        t = self.step_time_s
+        return self.compute_s / t if t > 0 else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "struct_bytes_per_device": self.struct_bytes_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "memory_struct_s": self.memory_struct_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "compute_fraction": self.compute_fraction,
+        }
+
+
+def model_flops(cfg, shape, n_chips: int) -> Dict:
+    """MODEL_FLOPS = 6 N D (train) or 2 N D (inference), N = active params."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mf = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mf = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        mf = 2.0 * n_active * tokens
+    return {"model_flops": mf, "model_flops_per_device": mf / n_chips,
+            "tokens": tokens, "active_params": n_active}

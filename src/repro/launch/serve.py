@@ -1,0 +1,71 @@
+"""Batched serving driver: prefill a batch of prompts, decode greedily.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --smoke \
+        --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..dist.sharding import ShardingRules
+from ..models import decode as dec
+from ..models import params as mparams
+from ..models.model import RunConfig
+from ..models.steps import build_serve_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    rules = ShardingRules.null()
+    run = RunConfig(attn_impl="ref")
+    key = jax.random.PRNGKey(args.seed)
+    params = mparams.init_params(cfg, key)
+
+    B = args.batch
+    prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab_size)
+    enc = None
+    if cfg.is_encoder_decoder:
+        enc = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model),
+                                dtype=cfg.jnp_dtype)
+
+    serve_step = jax.jit(build_serve_step(cfg, rules, run))
+    max_seq = args.prompt_len + args.gen
+    cache = dec.start_cache(cfg, params, B, max_seq, rules, run,
+                            encoder_frames=enc)
+    t0 = time.time()
+    logits, cache = dec.prefill(cfg, params, prompts, cache, rules, run)
+    t_prefill = time.time() - t0
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        tok, cache = serve_step(params, cache, tok[:, None])
+        out.append(tok)
+    gen = jnp.stack(out, axis=1)
+    dt = time.time() - t0
+    print(f"[serve] batch={B} prompt={args.prompt_len} gen={args.gen}")
+    print(f"[serve] prefill {t_prefill:.2f}s, decode {dt:.2f}s "
+          f"({B * (args.gen - 1) / max(dt, 1e-9):.1f} tok/s)")
+    print(f"[serve] sample generations (ids): {gen[:2, :12].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

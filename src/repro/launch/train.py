@@ -1,0 +1,165 @@
+"""Training driver: config-driven, checkpointed, fault-tolerant.
+
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --smoke \
+        --steps 50 --ckpt-dir /tmp/run1 [--resume] [--fail-at-step 30] \
+        [--dp-mode gossip|psum|none] [--mesh dxm]
+
+Fault tolerance demonstrated end-to-end on CPU:
+  * checkpoints are atomic (tmp + rename) and reshardable (gathered arrays,
+    device_put on restore under any mesh) -> elastic restarts;
+  * --fail-at-step N raises mid-run; re-launching with --resume reproduces
+    the exact same loss curve (data pipeline is stateless-per-step);
+  * --dp-mode gossip runs the paper's Algorithm 1 on the device ring for
+    gradient consensus (dist/gossip.py) instead of a fabric all-reduce.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import math
+import sys
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..ckpt import (latest_checkpoint, load_checkpoint, restore_arrays,
+                    save_checkpoint)
+from ..ckpt.checkpoint import wait_pending
+from ..configs import get_config
+from ..data import SyntheticLMData
+from ..dist import gossip
+from ..dist.sharding import ShardingRules, make_rules
+from ..models import decode as dec
+from ..models import params as mparams
+from ..models.model import RunConfig
+from ..models.steps import build_loss_fn, build_train_step
+from ..optim.adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+def build_gossip_train_step(cfg, rules, run, mesh, lr, K: Optional[int] = None):
+    """Explicit data-parallel step: per-shard grads + Chebyshev-gossip
+    consensus over the 'data' ring (the paper's Algorithm 1 on devices)."""
+    loss_fn = build_loss_fn(cfg, ShardingRules.null(), run)
+    n = mesh.shape["data"]
+    coeffs = gossip.consensus_coeffs(n, K)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(), P(), P("data")),
+        out_specs=(P(), P(), P()),
+        check_vma=False,
+    )
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads = gossip.gossip_mean_tree(grads, "data", coeffs)
+        loss = gossip.gossip_mean(loss[None], "data", coeffs)[0]
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm,
+                                   "step": opt_state.step}
+
+    return step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-at-step", type=int, default=None,
+                    help="inject a failure (fault-tolerance test)")
+    ap.add_argument("--dp-mode", choices=["none", "pjit", "gossip"],
+                    default="none")
+    ap.add_argument("--gossip-quantize", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="DxM device mesh, e.g. 4x1 (needs forced host devices)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    run = RunConfig(attn_impl="ref")
+
+    mesh = None
+    rules = ShardingRules.null()
+    if args.mesh:
+        d, m = (int(v) for v in args.mesh.split("x"))
+        mesh = jax.make_mesh((d, m), ("data", "model"),
+                             devices=jax.devices()[: d * m])
+        rules = make_rules(mesh, "default")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = mparams.init_params(cfg, key)
+    opt_state = adamw_init(params)
+    data = SyntheticLMData(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=args.seed,
+        n_vision_tokens=cfg.n_vision_tokens if cfg.family == "vlm" else 0,
+        d_model=cfg.d_model,
+        encoder_seq=cfg.encoder_seq,
+    )
+    start_step = 0
+
+    if args.resume and args.ckpt_dir:
+        path = latest_checkpoint(args.ckpt_dir)
+        if path:
+            step_saved, trees, _ = load_checkpoint(path)
+            params = restore_arrays(trees["params"], params)
+            opt_state = restore_arrays(trees["opt_state"], opt_state)
+            start_step = step_saved
+            print(f"[train] resumed from {path} at step {start_step}",
+                  flush=True)
+
+    if args.dp_mode == "gossip":
+        assert mesh is not None, "--dp-mode gossip needs --mesh"
+        step_fn = build_gossip_train_step(cfg, rules, run, mesh, args.lr)
+    else:
+        step_fn = jax.jit(build_train_step(cfg, rules, run, lr=args.lr))
+
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        if args.fail_at_step is not None and step == args.fail_at_step:
+            print(f"[train] INJECTED FAILURE at step {step}", flush=True)
+            raise SystemExit(42)
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"({(time.time()-t0):.1f}s)", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, step + 1,
+                            {"params": params, "opt_state": opt_state},
+                            async_save=True)
+    if args.ckpt_dir:
+        wait_pending()
+        if args.steps % args.ckpt_every != 0:
+            save_checkpoint(args.ckpt_dir, args.steps,
+                            {"params": params, "opt_state": opt_state})
+    print(f"[train] done: first loss {losses[0]:.4f} last {losses[-1]:.4f}",
+          flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,10 @@
+"""LM substrate: architecture-generic models for the assigned pool."""
+from . import decode, layers, mamba, model, moe, params, rwkv6, steps
+from .model import RunConfig, forward, lm_loss
+from .params import count_params, init_params, param_pspecs, param_shapes
+
+__all__ = [
+    "decode", "layers", "mamba", "model", "moe", "params", "rwkv6", "steps",
+    "RunConfig", "forward", "lm_loss",
+    "count_params", "init_params", "param_pspecs", "param_shapes",
+]

@@ -1,0 +1,334 @@
+"""KV-cache serving path: cache init/specs, prefill, single-token decode.
+
+Cache layout is one stacked pytree (leading 'layers' axis) consumed by the
+layer scan. Sub-quadratic archs carry O(1)-in-sequence state:
+  * rwkv6  — matrix wkv state + token-shift tails, no KV cache at all;
+  * hymba  — ring-buffer KV of the sliding window + SSM state.
+MLA caches the compressed latents (c_kv, k_rope) and decodes with the
+weight-absorbed trick, so its per-token cache is kv_lora+rope wide instead
+of 2 * H * hd.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import ShardingRules
+from . import layers as nn
+from . import mamba, rwkv6
+from .model import RunConfig, _merge_heads, _norm, _qkv, _split_heads, encode, ffn_branch
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+def cache_len(cfg: ModelConfig, max_seq: int) -> int:
+    if cfg.sliding_window > 0:
+        return min(cfg.sliding_window, max_seq)
+    return max_seq
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=None) -> Dict:
+    """dtype: storage dtype for the K/V tensors only (e.g. f8 quantized
+    cache); recurrent SSM/shift states always stay at model precision."""
+    kv_dtype = dtype or cfg.jnp_dtype
+    mdt = cfg.jnp_dtype
+    L, hd = cfg.n_layers, cfg.hd
+    cache: Dict = {"idx": jnp.zeros((), jnp.int32)}
+    if cfg.mixer == "rwkv6":
+        cache.update(rwkv6.init_state(cfg, batch, mdt))
+        return cache
+    sc = cache_len(cfg, max_seq)
+    if cfg.mixer == "mla":
+        cache["ckv"] = jnp.zeros((L, batch, sc, cfg.kv_lora_rank), kv_dtype)
+        cache["krope"] = jnp.zeros((L, batch, sc, cfg.rope_head_dim), kv_dtype)
+    else:
+        cache["k"] = jnp.zeros((L, batch, cfg.n_kv_heads, sc, hd), kv_dtype)
+        cache["v"] = jnp.zeros((L, batch, cfg.n_kv_heads, sc, hd), kv_dtype)
+    if cfg.mixer == "hymba":
+        cache.update(mamba.init_state(cfg, batch, mdt))
+    if cfg.is_encoder_decoder:
+        cache["xk"] = jnp.zeros((L, batch, cfg.n_kv_heads, cfg.encoder_seq, hd),
+                                kv_dtype)
+        cache["xv"] = jnp.zeros((L, batch, cfg.n_kv_heads, cfg.encoder_seq, hd),
+                                kv_dtype)
+    return cache
+
+
+def cache_axes(cfg: ModelConfig) -> Dict:
+    """Logical sharding axes matching init_cache's structure."""
+    ax: Dict = {"idx": ()}
+    if cfg.mixer == "rwkv6":
+        ax.update({
+            "wkv": ("layers", "batch", "heads", None, None),
+            "shift": ("layers", "batch", "embed"),
+            "cm_shift": ("layers", "batch", "embed"),
+        })
+        return ax
+    if cfg.mixer == "mla":
+        ax["ckv"] = ("layers", "batch", "kv_seq", "kv_lora")
+        ax["krope"] = ("layers", "batch", "kv_seq", None)
+    else:
+        ax["k"] = ("layers", "batch", "kv_heads", "kv_seq", "head_dim")
+        ax["v"] = ("layers", "batch", "kv_heads", "kv_seq", "head_dim")
+    if cfg.mixer == "hymba":
+        ax["ssm_h"] = ("layers", "batch", "ffn", "state")
+        ax["conv_tail"] = ("layers", "batch", None, "ffn")
+    if cfg.is_encoder_decoder:
+        ax["xk"] = ("layers", "batch", "kv_heads", "frames", "head_dim")
+        ax["xv"] = ("layers", "batch", "kv_heads", "frames", "head_dim")
+    return ax
+
+
+def cache_pspecs(cfg: ModelConfig, rules: ShardingRules) -> Dict:
+    return {k: rules.spec(*axes) if axes else rules.spec()
+            for k, axes in cache_axes(cfg).items()}
+
+
+def _layer_cache(cache: Dict) -> Dict:
+    return {k: v for k, v in cache.items() if k != "idx"}
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+def _write_slot(buf: Array, val: Array, slot: Array, axis: int) -> Array:
+    """dynamic_update_slice of a single position along `axis`."""
+    starts = [jnp.zeros((), jnp.int32)] * buf.ndim
+    starts[axis] = slot
+    return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype), starts)
+
+
+def _attn_decode(cfg, h, lc, idx, rules, run, sfx=""):
+    """Single-token attention over the (ring or full) cache."""
+    b = h.shape[0]
+    sc = lc["k"].shape[2]
+    ring = cfg.sliding_window > 0
+    q, k_t, v_t = _qkv(cfg, h, h, lc["p"], sfx)
+    positions = jnp.full((b, 1), idx, jnp.int32)
+    if cfg.mrope_sections:
+        pos3 = jnp.broadcast_to(positions[:, None, :], (b, 3, 1))
+        q = nn.apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+        k_t = nn.apply_mrope(k_t, pos3, cfg.mrope_sections, cfg.rope_theta)
+    elif not cfg.is_encoder_decoder:
+        q = nn.apply_rope(q, positions, cfg.rope_theta)
+        k_t = nn.apply_rope(k_t, positions, cfg.rope_theta)
+    slot = jnp.mod(idx, sc) if ring else idx
+    k_cache = _write_slot(lc["k"], k_t, slot, axis=2)
+    v_cache = _write_slot(lc["v"], v_t, slot, axis=2)
+    # slots written so far (ring: all once wrapped); attention over keys is
+    # permutation-invariant given absolute-rope'd k, so ring order is fine.
+    valid = jnp.arange(sc) <= jnp.minimum(idx, sc - 1)
+    kv_valid = jnp.broadcast_to(valid[None, :], (b, sc))
+    out = nn.attention(q, k_cache, v_cache, impl="ref", causal=False,
+                       kv_valid=kv_valid)
+    return _merge_heads(out) @ lc["p"]["wo" + sfx], k_cache, v_cache
+
+
+def _mla_decode(cfg, h, lc, idx, rules, run):
+    p = lc["p"]
+    b = h.shape[0]
+    hq, hd, rd, r_kv = cfg.n_heads, cfg.hd, cfg.rope_head_dim, cfg.kv_lora_rank
+    sc = lc["ckv"].shape[1]  # per-layer slice: (B, sc, r_kv)
+    positions = jnp.full((b, 1), idx, jnp.int32)
+    cq = nn.rms_norm(h @ p["wdq"], p["q_norm"])
+    q_nope = _split_heads(cq @ p["wuq"], hq)                   # (B,H,1,hd)
+    q_rope = nn.apply_rope(_split_heads(cq @ p["wq_rope"], hq),
+                           positions, cfg.rope_theta)          # (B,H,1,rd)
+    ckv_t = nn.rms_norm(h @ p["wdkv"], p["kv_norm"])           # (B,1,r_kv)
+    krope_t = nn.apply_rope(_split_heads(h @ p["wk_rope"], 1),
+                            positions, cfg.rope_theta)[:, 0]   # (B,1,rd)
+    ckv = _write_slot(lc["ckv"], ckv_t, idx, axis=1)
+    krope = _write_slot(lc["krope"], krope_t, idx, axis=1)
+    # weight-absorbed scores: q_abs (B,H,r_kv)
+    wuk = p["wuk"].reshape(r_kv, hq, hd)
+    wuv = p["wuv"].reshape(r_kv, hq, hd)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, :, 0].astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    s = jnp.einsum("bhr,bsr->bhs", q_abs, ckv.astype(jnp.float32))
+    s = s + jnp.einsum("bhr,bsr->bhs", q_rope[:, :, 0].astype(jnp.float32),
+                       krope.astype(jnp.float32))
+    s = s / ((hd + rd) ** 0.5)
+    valid = (jnp.arange(sc) <= idx)[None, None, :]
+    s = jnp.where(valid, s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", pr, ckv.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhd->bhd", ctx, wuv.astype(jnp.float32))
+    out = out.reshape(b, 1, hq * hd).astype(h.dtype)
+    return out @ p["wo"], ckv, krope
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Dict,
+    cache: Dict,
+    tokens: Array,
+    rules: ShardingRules,
+    run: RunConfig,
+    token_embeds: Optional[Array] = None,
+) -> Tuple[Array, Dict]:
+    """tokens (B, 1) -> (logits (B, V), updated cache).
+
+    token_embeds: optional (B, 1, D) embedding override (VLM vision tokens
+    during prefill)."""
+    B = tokens.shape[0]
+    idx = cache["idx"]
+    if token_embeds is not None:
+        x = token_embeds.astype(cfg.jnp_dtype)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.jnp_dtype)
+    if cfg.is_encoder_decoder:
+        pos = jnp.full((B, 1), idx, jnp.int32)
+        x = x + nn.sinusoidal_at(pos, cfg.d_model).astype(x.dtype)
+
+    def body(x, scan_in):
+        lp, lc = scan_in
+        lc = dict(lc)
+        lc["p"] = lp
+        new_lc = {}
+        if cfg.mixer == "rwkv6":
+            h = _norm(cfg, x, lp, "norm1")
+            y, (wkv, shift) = rwkv6.time_mix(
+                h, lp, (lc["wkv"], lc["shift"]), cfg.n_heads)
+            x = x + y
+            h = _norm(cfg, x, lp, "norm2")
+            y, cm_shift = rwkv6.channel_mix(h, lp, lc["cm_shift"])
+            x = x + y
+            new_lc.update({"wkv": wkv, "shift": shift, "cm_shift": cm_shift})
+            return x, new_lc
+
+        h = _norm(cfg, x, lp, "norm1")
+        if cfg.mixer == "mla":
+            y, ckv, krope = _mla_decode(cfg, h, lc, idx, rules, run)
+            new_lc.update({"ckv": ckv, "krope": krope})
+        elif cfg.mixer == "hymba":
+            y_attn, kc, vc = _attn_decode(cfg, h, lc, idx, rules, run)
+            y_ssm, (ssm_h, conv_tail) = mamba.ssm_branch(
+                h, lp, (lc["ssm_h"], lc["conv_tail"]), cfg.ssm_state)
+            y = 0.5 * (y_attn + y_ssm)
+            new_lc.update({"k": kc, "v": vc, "ssm_h": ssm_h,
+                           "conv_tail": conv_tail})
+        else:
+            y, kc, vc = _attn_decode(cfg, h, lc, idx, rules, run)
+            new_lc.update({"k": kc, "v": vc})
+        x = x + y
+        if cfg.is_encoder_decoder:
+            h = _norm(cfg, x, lp, "norm3")
+            q = _split_heads(h @ lp["wq_x"] + (lp["bq_x"] if cfg.qkv_bias else 0.0),
+                             cfg.n_heads)
+            out = nn.attention(q, lc["xk"], lc["xv"], impl="ref", causal=False)
+            x = x + _merge_heads(out) @ lp["wo_x"]
+            new_lc.update({"xk": lc["xk"], "xv": lc["xv"]})
+        h = _norm(cfg, x, lp, "norm2")
+        x = x + ffn_branch(cfg, h, lp, rules, run)
+        return rules.constrain(x, "batch", None, "embed"), new_lc
+
+    x, new_layer_cache = jax.lax.scan(
+        body, x, (params["layers"], _layer_cache(cache)),
+        unroll=True if run.unroll_layers else 1,
+    )
+    if cfg.norm == "ln":
+        x = nn.layer_norm(x, params["final_norm"], params["final_norm_bias"])
+    else:
+        x = nn.rms_norm(x, params["final_norm"])
+    logits = (x @ params["lm_head"].T.astype(x.dtype))[:, 0]
+    new_cache = dict(new_layer_cache)
+    new_cache["idx"] = idx + 1
+    return rules.constrain(logits, "batch", "vocab"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill / generation helpers (serving examples + equivalence tests)
+# ---------------------------------------------------------------------------
+def start_cache(
+    cfg: ModelConfig,
+    params: Dict,
+    batch: int,
+    max_seq: int,
+    rules: ShardingRules,
+    run: RunConfig,
+    encoder_frames: Optional[Array] = None,
+) -> Dict:
+    """Fresh cache; for encoder-decoder archs also runs the encoder and
+    precomputes the per-layer cross-attention K/V."""
+    cache = init_cache(cfg, batch, max_seq)
+    if cfg.is_encoder_decoder:
+        assert encoder_frames is not None
+        enc_out = encode(cfg, params, encoder_frames, rules, run)
+        lw = params["layers"]
+        hd, hkv = cfg.hd, cfg.n_kv_heads
+
+        def proj(w, b):
+            y = jnp.einsum("bsd,ldh->lbsh", enc_out, w)
+            if b is not None:
+                y = y + b[:, None, None, :]
+            L, B, S, _ = y.shape
+            return y.reshape(L, B, S, hkv, hd).transpose(0, 1, 3, 2, 4)
+
+        cache["xk"] = proj(lw["wk_x"], lw.get("bk_x")).astype(cache["xk"].dtype)
+        cache["xv"] = proj(lw["wv_x"], lw.get("bv_x")).astype(cache["xv"].dtype)
+    return cache
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Dict,
+    tokens: Array,
+    cache: Dict,
+    rules: ShardingRules,
+    run: RunConfig,
+    vision_embeds: Optional[Array] = None,
+) -> Tuple[Array, Dict]:
+    """Sequential prefill: feed the prompt token-by-token through
+    decode_step (a lax.scan). Returns (last logits (B,V), cache).
+
+    vision_embeds: optional (B, nv, D) — overrides the first nv token
+    embeddings (VLM image tokens), mirroring forward()."""
+    embeds = jnp.take(params["embed"], tokens, axis=0).astype(cfg.jnp_dtype)
+    if vision_embeds is not None:
+        nv = vision_embeds.shape[1]
+        embeds = jnp.concatenate(
+            [vision_embeds.astype(embeds.dtype), embeds[:, nv:]], axis=1
+        )
+
+    def body(cache, xs):
+        tok, emb = xs
+        logits, cache = decode_step(cfg, params, cache, tok[:, None], rules,
+                                    run, token_embeds=emb[:, None])
+        return cache, logits
+
+    cache, logits = jax.lax.scan(
+        body, cache, (tokens.T, jnp.moveaxis(embeds, 1, 0))
+    )
+    return logits[-1], cache
+
+
+def generate(
+    cfg: ModelConfig,
+    params: Dict,
+    prompt: Array,
+    n_tokens: int,
+    rules: ShardingRules,
+    run: RunConfig,
+    encoder_frames: Optional[Array] = None,
+) -> Array:
+    """Greedy generation; returns (B, n_tokens) of generated ids."""
+    B = prompt.shape[0]
+    cache = start_cache(cfg, params, B, prompt.shape[1] + n_tokens, rules, run,
+                        encoder_frames)
+    logits, cache = prefill(cfg, params, prompt, cache, rules, run)
+
+    def body(carry, _):
+        logits, cache = carry
+        tok = jnp.argmax(logits, axis=-1).astype(prompt.dtype)
+        logits, cache = decode_step(cfg, params, cache, tok[:, None], rules, run)
+        return (logits, cache), tok
+
+    (_, _), toks = jax.lax.scan(body, (logits, cache), None, length=n_tokens)
+    return toks.T

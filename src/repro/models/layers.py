@@ -1,0 +1,237 @@
+"""Shared neural primitives: norms, rotary embeddings, FFNs, attention math.
+
+All functions are pure and operate on explicitly-shaped arrays; sharding
+annotations are applied by the caller (models/model.py) via ShardingRules.
+Attention exposes three implementations — 'ref' (materialized logits),
+'chunked' (lax.scan over query blocks; flash-attention-style O(chunk*S)
+working set at the XLA level), and 'flash' (the Pallas kernel, TPU) — the
+§Perf hillclimb toggles these.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+
+Array = jax.Array
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def group_norm_heads(x: Array, scale: Array, eps: float = 64e-5) -> Array:
+    """Per-head LayerNorm used by RWKV's wkv output; x (..., H, hd)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (+ M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10_000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10_000.0) -> Array:
+    """x: (B, H, S, hd); positions: (B, S) absolute token positions."""
+    b, h, s, d = x.shape
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: Array,
+    positions: Array,
+    sections: Tuple[int, ...],
+    theta: float = 10_000.0,
+) -> Array:
+    """M-RoPE (Qwen2-VL): positions (B, 3, S) = (temporal, h, w) id streams;
+    `sections` splits the half-dim rotary frequency bands among the streams.
+    In the text-only backbone stub the three streams coincide."""
+    b, h, s, d = x.shape
+    assert sum(sections) == d // 2, "sections must cover half the head dim"
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    # Pick the position stream per frequency band.
+    stream = jnp.concatenate([
+        jnp.full((sec,), i, dtype=jnp.int32) for i, sec in enumerate(sections)
+    ])                                                  # (d/2,)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32), stream[None, :, None].repeat(b, 0), axis=1
+    )  # (B, d/2, S) — per-band positions
+    ang = jnp.einsum("bfs,f->bsf", pos, freqs)[:, None]  # (B,1,S,d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_at(positions: Array, d_model: int) -> Array:
+    """Whisper-style sinusoidal embeddings at given (possibly traced)
+    positions; positions (..., S) -> (..., S, d_model)."""
+    pos = positions.astype(jnp.float32)[..., None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)
+    ang = pos / jnp.power(10_000.0, dim / d_model)
+    pe = jnp.zeros(positions.shape + (d_model,), jnp.float32)
+    pe = pe.at[..., 0::2].set(jnp.sin(ang)).at[..., 1::2].set(jnp.cos(ang))
+    return pe
+
+
+def sinusoidal_positions(seq: int, d_model: int) -> Array:
+    return sinusoidal_at(jnp.arange(seq), d_model)
+
+
+# ---------------------------------------------------------------------------
+# Attention math
+# ---------------------------------------------------------------------------
+def _window_mask(rows: Array, cols: Array, causal: bool, window: int) -> Array:
+    ok = jnp.ones(jnp.broadcast_shapes(rows.shape, cols.shape), bool)
+    if causal:
+        ok &= cols <= rows
+    if window > 0:
+        ok &= cols > rows - window
+    return ok
+
+
+def _compute_dtype(x: Array) -> Array:
+    """f8 caches compute in bf16 (dequant fuses into the dot on TPU);
+    fp32 accumulation comes from preferred_element_type."""
+    if x.dtype in (jnp.float8_e4m3fn, jnp.float8_e5m2):
+        return x.astype(jnp.bfloat16)
+    return x
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, scale=None,
+                  kv_valid: Optional[Array] = None) -> Array:
+    """Materialized-logits attention. q (B,Hq,Sq,hd), k/v (B,Hkv,Sk,hd).
+    kv_valid: optional (B, Sk) bool mask of valid cache slots (decode).
+
+    Operands stay in their storage dtype (bf16 / dequantized f8) with fp32
+    accumulation via preferred_element_type — the KV cache is never
+    materialized as an fp32 copy (§Perf decode iteration)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    k = _compute_dtype(k)
+    v = _compute_dtype(v)
+    qg = q.reshape(b, hkv, group, sq, d).astype(k.dtype)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    rows = jnp.arange(sk - sq, sk)[:, None] if causal else jnp.arange(sq)[:, None]
+    cols = jnp.arange(sk)[None, :]
+    mask = _window_mask(rows, cols, causal, window)
+    if kv_valid is not None:
+        mask = mask[None] & kv_valid[:, None, :]
+        mask = mask[:, None, None]  # (B,1,1,Sq,Sk)
+    s = jnp.where(mask, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, sq, v.shape[-1]).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, causal=True, window=0, scale=None,
+                      chunk: int = 1024, unroll: bool = False) -> Array:
+    """lax.scan over query chunks: working set O(chunk * Sk) instead of
+    O(Sq * Sk). Equivalent numerics to attention_ref. `unroll` unrolls the
+    chunk scan (dry-run FLOP accounting — while bodies are counted once)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    if sq <= chunk or sq % chunk != 0:
+        # short or non-chunk-multiple sequences (e.g. whisper's 1500 frames)
+        return attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    n_chunks = sq // chunk
+    qc = q.reshape(b, hkv, group, n_chunks, chunk, d).transpose(3, 0, 1, 2, 4, 5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    cols = jnp.arange(sk)[None, :]
+
+    def body(_, args):
+        i, qi = args  # qi: (B, Hkv, G, chunk, d)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qi.astype(jnp.float32), kf) * scale
+        rows = i * chunk + jnp.arange(chunk)[:, None]
+        mask = _window_mask(rows, cols, causal, window)
+        s = jnp.where(mask, s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        oi = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+        return None, oi.astype(q.dtype)
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(n_chunks), qc),
+                          unroll=True if unroll else 1)
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, sq, v.shape[-1])
+    return out
+
+
+def attention(q, k, v, *, impl="chunked", causal=True, window=0, scale=None,
+              chunk: int = 1024, kv_valid=None, unroll: bool = False) -> Array:
+    if (impl == "flash" and window == 0 and kv_valid is None
+            and q.shape[-1] == v.shape[-1]):
+        return kops.flash_attention(q, k, v, causal=causal, scale=scale,
+                                    use_pallas=True)
+    if impl == "chunked" and kv_valid is None:
+        return attention_chunked(q, k, v, causal=causal, window=window,
+                                 scale=scale, chunk=chunk, unroll=unroll)
+    return attention_ref(q, k, v, causal=causal, window=window, scale=scale,
+                         kv_valid=kv_valid)
+
+
+# ---------------------------------------------------------------------------
+# FFNs
+# ---------------------------------------------------------------------------
+def ffn_swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def ffn_gelu(x, w_in, b_in, w_out, b_out):
+    h = jax.nn.gelu(x @ w_in + b_in, approximate=True)
+    return h @ w_out + b_out
+
+
+def rwkv_channel_mix(x, x_prev, mu_k, mu_r, w_k, w_v, w_r):
+    """RWKV channel mix: k = relu(xk W_k)^2, out = sigmoid(xr W_r) * (k W_v)."""
+    xk = x + mu_k * (x_prev - x)
+    xr = x + mu_r * (x_prev - x)
+    k = jnp.square(jax.nn.relu(xk @ w_k))
+    return jax.nn.sigmoid(xr @ w_r) * (k @ w_v)
+
+
+def token_shift(x: Array, last: Optional[Array] = None) -> Array:
+    """RWKV token shift: x_{t-1} along seq; `last` seeds position -1."""
+    shifted = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    if last is not None:
+        shifted = shifted.at[:, 0].set(last)
+    return shifted

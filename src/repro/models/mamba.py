@@ -1,0 +1,78 @@
+"""Selective SSM (S6 / Mamba) branch used by the Hymba hybrid layers.
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t
+    y_t = C_t . h_t + D x_t,            dt_t, B_t, C_t input-dependent.
+
+Carried state per layer: h (B, d_in, ssm_state) and the depthwise-conv tail
+(B, conv_width-1, d_in) — O(1) in sequence length (long_500k eligible).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _causal_conv(x: Array, w: Array, b: Array, tail: Array) -> Tuple[Array, Array]:
+    """Depthwise causal conv1d. x (B,S,d_in); w (cw, d_in); tail (B,cw-1,d_in)."""
+    cw = w.shape[0]
+    xin = jnp.concatenate([tail, x], axis=1)             # (B, S+cw-1, d_in)
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + xin[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    new_tail = xin[:, xin.shape[1] - (cw - 1):, :] if cw > 1 else tail
+    return out + b, new_tail
+
+
+def ssm_branch(
+    x: Array, p: Dict, state: Tuple[Array, Array], ssm_state: int
+) -> Tuple[Array, Tuple[Array, Array]]:
+    """x: (B, S, D) normed input. state: (h (B,d_in,st), conv_tail)."""
+    B, S, D = x.shape
+    h0, conv_tail = state
+    d_in = h0.shape[1]
+    st = ssm_state
+    dt_rank = p["w_dt"].shape[0]
+
+    xz = x @ p["w_in"]                                   # (B,S,2*d_in)
+    xp, z = jnp.split(xz, 2, axis=-1)
+    xc, new_tail = _causal_conv(xp, p["conv_w"], p["conv_b"], conv_tail)
+    xc = jax.nn.silu(xc)
+
+    bcdt = xc @ p["w_bcdt"]                              # (B,S,2st+dt_rank)
+    Bmat = bcdt[..., :st]
+    Cmat = bcdt[..., st : 2 * st]
+    dt = jax.nn.softplus(bcdt[..., 2 * st :] @ p["w_dt"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))         # (d_in, st)
+
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A)  # (B,S,d_in,st)
+    dBx = (dt * xc)[..., None] * Bmat[:, :, None, :]     # (B,S,d_in,st)
+
+    def step(h, inputs):
+        dA_t, dBx_t, C_t = inputs
+        h_new = dA_t * h + dBx_t
+        y_t = jnp.einsum("bds,bs->bd", h_new, C_t)
+        return h_new, y_t
+
+    xs = (
+        jnp.moveaxis(dA, 1, 0),
+        jnp.moveaxis(dBx.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Cmat.astype(jnp.float32), 1, 0),
+    )
+    h_final, y = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(y, 0, 1).astype(x.dtype)            # (B,S,d_in)
+    y = y + p["D_skip"] * xc
+    y = y * jax.nn.silu(z)
+    return y @ p["w_ssm_out"], (h_final.astype(h0.dtype), new_tail)
+
+
+def init_state(cfg, batch: int, dtype) -> Dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    L = cfg.n_layers
+    return {
+        "ssm_h": jnp.zeros((L, batch, d_in, cfg.ssm_state), jnp.float32),
+        "conv_tail": jnp.zeros((L, batch, cfg.conv_width - 1, d_in), dtype),
+    }

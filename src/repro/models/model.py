@@ -1,0 +1,337 @@
+"""Architecture-generic LM: forward, loss, KV-cache decode, for every arch in
+the assigned pool. Layers are scanned (stacked params) so the HLO is O(1) in
+depth; mixers dispatch per config (GQA attention / MLA / RWKV6 / Hymba
+attn+SSM hybrid); whisper adds an encoder stack + cross attention.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import ShardingRules
+from . import layers as nn
+from . import mamba, moe, rwkv6
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Performance levers (the §Perf hillclimb knobs)."""
+
+    attn_impl: str = "chunked"      # ref | chunked | flash
+    attn_chunk: int = 1024
+    remat: str = "none"             # none | full | dots | named
+    scheme: str = "default"         # sharding scheme (dist/sharding.py)
+    moe_capacity_factor: Optional[float] = None  # override config
+    # --- §Perf hillclimb levers -------------------------------------------
+    # recompute attention internals in bwd (drops stored chunk logits)
+    attn_remat: bool = False
+    # emit with_sharding_constraint on q/k/v (baseline) or let GSPMD propagate
+    qkv_constraints: bool = True
+    # MoE dispatch: 'global_sort' (baseline, one global argsort) or
+    # 'grouped' (per-data-shard local sort + expert all-to-all)
+    moe_dispatch: str = "global_sort"
+    moe_groups: int = 1
+    # Fully unroll the layer scan. Used by the dry-run: XLA cost_analysis
+    # counts a while-loop body ONCE, so scanned-layer FLOPs/collective bytes
+    # would be under-reported by ~n_layers. Unrolling makes them exact.
+    unroll_layers: bool = False
+
+
+def _norm(cfg: ModelConfig, x: Array, p: Dict, name: str) -> Array:
+    if cfg.norm == "ln":
+        return nn.layer_norm(x, p[name], p[name + "_bias"])
+    return nn.rms_norm(x, p[name])
+
+
+def _split_heads(x: Array, n_heads: int) -> Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: Array) -> Array:
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+# ---------------------------------------------------------------------------
+# Attention branches (train/prefill path)
+# ---------------------------------------------------------------------------
+def _qkv(cfg: ModelConfig, x: Array, kv_src: Array, p: Dict, sfx: str = ""):
+    nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    if sfx == "":
+        # fused projection (one matmul, one bwd dx all-reduce — §Perf C2)
+        qkv = x @ p["wqkv"]
+        if cfg.qkv_bias:
+            qkv = qkv + p["bqkv"]
+        q = qkv[..., : nq * hd]
+        k = qkv[..., nq * hd : (nq + nkv) * hd]
+        v = qkv[..., (nq + nkv) * hd :]
+    else:
+        q = x @ p["wq" + sfx]
+        k = kv_src @ p["wk" + sfx]
+        v = kv_src @ p["wv" + sfx]
+        if cfg.qkv_bias:
+            q = q + p["bq" + sfx]
+            k = k + p["bk" + sfx]
+            v = v + p["bv" + sfx]
+    return (_split_heads(q, nq), _split_heads(k, nkv), _split_heads(v, nkv))
+
+
+def attn_branch(
+    cfg: ModelConfig, x: Array, p: Dict, rules: ShardingRules, run: RunConfig,
+    positions: Array, *, causal: bool = True, use_rope: bool = True,
+    window: int = 0, kv_src: Optional[Array] = None, sfx: str = "",
+) -> Array:
+    kv_src = x if kv_src is None else kv_src
+    q, k, v = _qkv(cfg, x, kv_src, p, sfx)
+    if use_rope:
+        if cfg.mrope_sections:
+            pos3 = jnp.broadcast_to(positions[:, None, :],
+                                    (positions.shape[0], 3, positions.shape[1]))
+            q = nn.apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+            k = nn.apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = nn.apply_rope(q, positions, cfg.rope_theta)
+            k = nn.apply_rope(k, positions, cfg.rope_theta)
+    if run.qkv_constraints:
+        q = rules.constrain(q, "batch", "heads", "seq", "head_dim")
+        k = rules.constrain(k, "batch", "kv_heads", None, "head_dim")
+        v = rules.constrain(v, "batch", "kv_heads", None, "head_dim")
+    attn = functools.partial(nn.attention, impl=run.attn_impl, causal=causal,
+                             window=window, chunk=run.attn_chunk,
+                             unroll=run.unroll_layers)
+    if run.attn_remat:
+        attn = jax.checkpoint(attn)
+    out = attn(q, k, v)
+    return _merge_heads(out) @ p["wo" + sfx]
+
+
+def mla_branch(
+    cfg: ModelConfig, x: Array, p: Dict, rules: ShardingRules, run: RunConfig,
+    positions: Array,
+) -> Array:
+    b, s, _ = x.shape
+    hq, hd, rd = cfg.n_heads, cfg.hd, cfg.rope_head_dim
+    cq = nn.rms_norm(x @ p["wdq"], p["q_norm"])
+    q_nope = _split_heads(cq @ p["wuq"], hq)                    # (B,H,S,hd)
+    q_rope = nn.apply_rope(_split_heads(cq @ p["wq_rope"], hq),
+                           positions, cfg.rope_theta)
+    ckv = nn.rms_norm(x @ p["wdkv"], p["kv_norm"])              # (B,S,r_kv)
+    k_rope = nn.apply_rope(_split_heads(x @ p["wk_rope"], 1),
+                           positions, cfg.rope_theta)           # (B,1,S,rd)
+    k_nope = _split_heads(ckv @ p["wuk"], hq)
+    v = _split_heads(ckv @ p["wuv"], hq)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, hq, s, rd))],
+                        axis=-1)
+    if run.qkv_constraints:
+        q = rules.constrain(q, "batch", "heads", "seq", None)
+        k = rules.constrain(k, "batch", "heads", None, None)
+        v = rules.constrain(v, "batch", "heads", None, None)
+    attn = functools.partial(nn.attention, impl=run.attn_impl, causal=True,
+                             scale=1.0 / ((hd + rd) ** 0.5),
+                             chunk=run.attn_chunk, unroll=run.unroll_layers)
+    if run.attn_remat:
+        attn = jax.checkpoint(attn)
+    out = attn(q, k, v)
+    return _merge_heads(out) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# FFN dispatch
+# ---------------------------------------------------------------------------
+def ffn_branch(cfg: ModelConfig, x: Array, p: Dict, rules: ShardingRules,
+               run: RunConfig) -> Array:
+    b, s, d = x.shape
+    if cfg.n_experts > 0:
+        cf = run.moe_capacity_factor or cfg.capacity_factor
+        if run.moe_dispatch == "grouped":
+            y = moe.moe_ffn_grouped(
+                x.reshape(b * s, d), p["router"], p["we_gate"], p["we_up"],
+                p["we_down"], top_k=cfg.top_k, capacity_factor=cf,
+                n_groups=run.moe_groups, rules=rules,
+            ).reshape(b, s, d)
+        else:
+            y = moe.moe_ffn(
+                x.reshape(b * s, d), p["router"], p["we_gate"], p["we_up"],
+                p["we_down"], top_k=cfg.top_k, capacity_factor=cf,
+            ).reshape(b, s, d)
+        if cfg.n_shared_experts > 0:
+            y = y + moe.shared_expert_ffn(x, p)
+        return y
+    if cfg.act == "swiglu":
+        gu = x @ p["w_gu"]                      # fused gate+up (§Perf C2)
+        gate, up = jnp.split(gu, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+        h = rules.constrain(h, "batch", "seq", "ffn")
+        return h @ p["w_down"]
+    return nn.ffn_gelu(x, p["w_in"], p["b_in"], p["w_out"], p["b_out"])
+
+
+# ---------------------------------------------------------------------------
+# Decoder blocks (train path)
+# ---------------------------------------------------------------------------
+def _make_block(cfg: ModelConfig, rules: ShardingRules, run: RunConfig,
+                positions: Array, enc_out: Optional[Array] = None):
+    """Returns block(x, layer_params) -> x for the lax.scan over layers."""
+
+    def block(x: Array, lp: Dict) -> Array:
+        if cfg.mixer == "rwkv6":
+            B = x.shape[0]
+            st = (
+                jnp.zeros((B, cfg.n_heads, cfg.hd, cfg.hd), jnp.float32),
+                jnp.zeros((B, cfg.d_model), x.dtype),
+            )
+            h = _norm(cfg, x, lp, "norm1")
+            y, _ = rwkv6.time_mix(h, lp, st, cfg.n_heads)
+            x = x + y
+            h = _norm(cfg, x, lp, "norm2")
+            y, _ = rwkv6.channel_mix(h, lp, jnp.zeros((B, cfg.d_model), x.dtype))
+            return x + y
+
+        h = _norm(cfg, x, lp, "norm1")
+        if cfg.mixer == "mla":
+            y = mla_branch(cfg, h, lp, rules, run, positions)
+        elif cfg.mixer == "hymba":
+            y_attn = attn_branch(cfg, h, lp, rules, run, positions,
+                                 window=cfg.sliding_window)
+            B = x.shape[0]
+            d_in = cfg.ssm_expand * cfg.d_model
+            st = (
+                jnp.zeros((B, d_in, cfg.ssm_state), jnp.float32),
+                jnp.zeros((B, cfg.conv_width - 1, d_in), x.dtype),
+            )
+            y_ssm, _ = mamba.ssm_branch(h, lp, st, cfg.ssm_state)
+            y = 0.5 * (y_attn + y_ssm)
+        else:
+            y = attn_branch(cfg, h, lp, rules, run, positions, causal=True,
+                            use_rope=not cfg.is_encoder_decoder,
+                            window=cfg.sliding_window)
+        y = checkpoint_name(y, "mix_out")
+        x = x + y
+        if cfg.is_encoder_decoder:
+            h = _norm(cfg, x, lp, "norm3")
+            y = attn_branch(cfg, h, lp, rules, run, positions, causal=False,
+                            use_rope=False, kv_src=enc_out, sfx="_x")
+            x = x + y
+        h = _norm(cfg, x, lp, "norm2")
+        x = x + checkpoint_name(ffn_branch(cfg, h, lp, rules, run), "ffn_out")
+        return rules.constrain(x, "batch", "seq", "embed")
+
+    return block
+
+
+def _maybe_remat(fn, run: RunConfig):
+    if run.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if run.remat == "dots":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+    if run.remat == "named":
+        # Save exactly the post-collective block activations: the backward
+        # recompute then never re-runs the forward all-reduces, at a memory
+        # cost of 2 x (B, S, D) per layer.
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.save_only_these_names(
+                "mix_out", "ffn_out"),
+        )
+    return fn
+
+
+def _scan_layers(x: Array, layer_params: Dict, block, run: RunConfig) -> Array:
+    body = _maybe_remat(lambda c, lp: (block(c, lp), None), run)
+    x, _ = jax.lax.scan(body, x, layer_params,
+                        unroll=True if run.unroll_layers else 1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------
+def _make_encoder_block(cfg: ModelConfig, rules: ShardingRules,
+                        run: RunConfig):
+    def block(x: Array, lp: Dict) -> Array:
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        h = _norm(cfg, x, lp, "norm1")
+        x = x + attn_branch(cfg, h, lp, rules, run, positions, causal=False,
+                            use_rope=False)
+        h = _norm(cfg, x, lp, "norm2")
+        x = x + ffn_branch(cfg, h, lp, rules, run)
+        return rules.constrain(x, "batch", "frames", "embed")
+
+    return block
+
+
+def encode(cfg: ModelConfig, params: Dict, frames: Array,
+           rules: ShardingRules, run: RunConfig) -> Array:
+    """frames: (B, enc_seq, D) precomputed frame embeddings (conv stub)."""
+    x = frames + nn.sinusoidal_positions(frames.shape[1], cfg.d_model).astype(
+        frames.dtype
+    )
+    block = _make_encoder_block(cfg, rules, run)
+    x = _scan_layers(x, params["encoder"]["layers"], block, run)
+    if cfg.norm == "ln":
+        return nn.layer_norm(x, params["encoder"]["final_norm"],
+                             params["encoder"]["final_norm_bias"])
+    return nn.rms_norm(x, params["encoder"]["final_norm"])
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+def forward(
+    cfg: ModelConfig,
+    params: Dict,
+    tokens: Array,
+    rules: ShardingRules,
+    run: RunConfig,
+    *,
+    vision_embeds: Optional[Array] = None,
+    encoder_frames: Optional[Array] = None,
+) -> Array:
+    """tokens (B, S) -> logits (B, S, V)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.jnp_dtype)
+    if cfg.family == "vlm" and vision_embeds is not None:
+        nv = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, nv:]], axis=1)
+    if cfg.is_encoder_decoder:
+        x = x + nn.sinusoidal_positions(S, cfg.d_model).astype(x.dtype)
+    x = rules.constrain(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        assert encoder_frames is not None, "whisper needs encoder frames"
+        enc_out = encode(cfg, params, encoder_frames, rules, run)
+
+    block = _make_block(cfg, rules, run, positions, enc_out)
+    x = _scan_layers(x, params["layers"], block, run)
+
+    if cfg.norm == "ln":
+        x = nn.layer_norm(x, params["final_norm"], params["final_norm_bias"])
+    else:
+        x = nn.rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"].T.astype(x.dtype)
+    return rules.constrain(logits, "batch", "seq", "vocab")
+
+
+def lm_loss(logits: Array, tokens: Array) -> Array:
+    """Next-token cross entropy (fp32 logsumexp), mean over tokens."""
+    lg = logits[:, :-1].astype(jnp.float32)
+    tg = tokens[:, 1:]
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)

@@ -1,0 +1,275 @@
+"""Parameter metadata trees: one source of truth for shapes, logical sharding
+axes, and initialization of every architecture in the pool.
+
+`abstract_params(cfg)` builds a pytree of ParamMeta; from it we derive
+  * init_params(cfg, key)        — materialized tree (smoke tests / training)
+  * param_shapes(cfg)            — ShapeDtypeStruct tree (dry-run lowering)
+  * param_pspecs(cfg, rules)     — PartitionSpec tree (in_shardings)
+
+All per-layer tensors are stacked with a leading 'layers' axis and consumed
+by lax.scan in models/model.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import ShardingRules
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamMeta:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"       # normal | zeros | ones
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _attn_metas(cfg: ModelConfig, L: int, cross: bool = False) -> Dict:
+    d, hd = cfg.d_model, cfg.hd
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    sfx = "_x" if cross else ""
+    # Self-attention uses a FUSED qkv projection: one column-parallel matmul
+    # -> one partial-sum all-reduce of dx in backward instead of three
+    # (§Perf iteration C2; Megatron fused-QKV). Cross attention keeps k/v
+    # separate (different input stream).
+    if cross:
+        m = {
+            f"wq{sfx}": ParamMeta((L, d, nq * hd), ("layers", "embed", "heads")),
+            f"wk{sfx}": ParamMeta((L, d, nkv * hd), ("layers", "embed", "kv_heads")),
+            f"wv{sfx}": ParamMeta((L, d, nkv * hd), ("layers", "embed", "kv_heads")),
+            f"wo{sfx}": ParamMeta((L, nq * hd, d), ("layers", "heads", "embed")),
+        }
+        if cfg.qkv_bias:
+            m[f"bq{sfx}"] = ParamMeta((L, nq * hd), ("layers", "heads"), "zeros")
+            m[f"bk{sfx}"] = ParamMeta((L, nkv * hd), ("layers", "kv_heads"), "zeros")
+            m[f"bv{sfx}"] = ParamMeta((L, nkv * hd), ("layers", "kv_heads"), "zeros")
+        return m
+    fused = (nq + 2 * nkv) * hd
+    m = {
+        "wqkv": ParamMeta((L, d, fused), ("layers", "embed", "heads")),
+        "wo": ParamMeta((L, nq * hd, d), ("layers", "heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        m["bqkv"] = ParamMeta((L, fused), ("layers", "heads"), "zeros")
+    return m
+
+
+def _mla_metas(cfg: ModelConfig, L: int) -> Dict:
+    d, hd = cfg.d_model, cfg.hd
+    nq = cfg.n_heads
+    r_kv, r_q, r_rope = cfg.kv_lora_rank, cfg.q_lora_rank, cfg.rope_head_dim
+    return {
+        "wdq": ParamMeta((L, d, r_q), ("layers", "embed", "kv_lora")),
+        "q_norm": ParamMeta((L, r_q), ("layers", "kv_lora"), "ones"),
+        "wuq": ParamMeta((L, r_q, nq * hd), ("layers", "kv_lora", "heads")),
+        "wq_rope": ParamMeta((L, r_q, nq * r_rope), ("layers", "kv_lora", "heads")),
+        "wdkv": ParamMeta((L, d, r_kv), ("layers", "embed", "kv_lora")),
+        "kv_norm": ParamMeta((L, r_kv), ("layers", "kv_lora"), "ones"),
+        "wk_rope": ParamMeta((L, d, r_rope), ("layers", "embed", "head_dim")),
+        "wuk": ParamMeta((L, r_kv, nq * hd), ("layers", "kv_lora", "heads")),
+        "wuv": ParamMeta((L, r_kv, nq * hd), ("layers", "kv_lora", "heads")),
+        "wo": ParamMeta((L, nq * hd, d), ("layers", "heads", "embed")),
+    }
+
+
+def _rwkv_metas(cfg: ModelConfig, L: int) -> Dict:
+    d, F = cfg.d_model, cfg.d_ff
+    H, hd = cfg.n_heads, cfg.hd
+    lora = 64
+    return {
+        # time mix
+        "w_r": ParamMeta((L, d, d), ("layers", "embed", "heads")),
+        "w_k": ParamMeta((L, d, d), ("layers", "embed", "heads")),
+        "w_v": ParamMeta((L, d, d), ("layers", "embed", "heads")),
+        "w_g": ParamMeta((L, d, d), ("layers", "embed", "heads")),
+        "w_o": ParamMeta((L, d, d), ("layers", "heads", "embed")),
+        "mu_r": ParamMeta((L, d), ("layers", "embed"), "zeros"),
+        "mu_k": ParamMeta((L, d), ("layers", "embed"), "zeros"),
+        "mu_v": ParamMeta((L, d), ("layers", "embed"), "zeros"),
+        "mu_g": ParamMeta((L, d), ("layers", "embed"), "zeros"),
+        "mu_w": ParamMeta((L, d), ("layers", "embed"), "zeros"),
+        "decay_base": ParamMeta((L, d), ("layers", "embed"), "zeros"),
+        "w_dd1": ParamMeta((L, d, lora), ("layers", "embed", None)),
+        "w_dd2": ParamMeta((L, lora, d), ("layers", None, "embed")),
+        "bonus": ParamMeta((L, H, hd), ("layers", "heads", None), "zeros"),
+        "ln_x": ParamMeta((L, H, hd), ("layers", "heads", None), "ones"),
+        # channel mix
+        "w_ck": ParamMeta((L, d, F), ("layers", "embed", "ffn")),
+        "w_cv": ParamMeta((L, F, d), ("layers", "ffn", "embed")),
+        "w_cr": ParamMeta((L, d, d), ("layers", "embed", None)),
+        "mu_ck": ParamMeta((L, d), ("layers", "embed"), "zeros"),
+        "mu_cr": ParamMeta((L, d), ("layers", "embed"), "zeros"),
+    }
+
+
+def _mamba_metas(cfg: ModelConfig, L: int) -> Dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    st = cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    return {
+        "w_in": ParamMeta((L, d, 2 * d_in), ("layers", "embed", "ffn")),
+        "conv_w": ParamMeta((L, cfg.conv_width, d_in), ("layers", None, "ffn")),
+        "conv_b": ParamMeta((L, d_in), ("layers", "ffn"), "zeros"),
+        "w_bcdt": ParamMeta((L, d_in, 2 * st + dt_rank), ("layers", "ffn", None)),
+        "w_dt": ParamMeta((L, dt_rank, d_in), ("layers", None, "ffn")),
+        "dt_bias": ParamMeta((L, d_in), ("layers", "ffn"), "zeros"),
+        "A_log": ParamMeta((L, d_in, st), ("layers", "ffn", "state"), "ones"),
+        "D_skip": ParamMeta((L, d_in), ("layers", "ffn"), "ones"),
+        "w_ssm_out": ParamMeta((L, d_in, d), ("layers", "ffn", "embed")),
+    }
+
+
+def _ffn_metas(cfg: ModelConfig, L: int) -> Dict:
+    d, F = cfg.d_model, cfg.d_ff
+    if cfg.n_experts > 0:
+        E = cfg.n_experts
+        m = {
+            "router": ParamMeta((L, d, E), ("layers", "embed", "expert")),
+            "we_gate": ParamMeta((L, E, d, F), ("layers", "expert", "embed", "ffn")),
+            "we_up": ParamMeta((L, E, d, F), ("layers", "expert", "embed", "ffn")),
+            "we_down": ParamMeta((L, E, F, d), ("layers", "expert", "ffn", "embed")),
+        }
+        if cfg.n_shared_experts > 0:
+            Fs = F * cfg.n_shared_experts
+            m.update({
+                "ws_gate": ParamMeta((L, d, Fs), ("layers", "embed", "ffn")),
+                "ws_up": ParamMeta((L, d, Fs), ("layers", "embed", "ffn")),
+                "ws_down": ParamMeta((L, Fs, d), ("layers", "ffn", "embed")),
+            })
+        return m
+    if cfg.act == "swiglu":
+        # Fused gate+up: one column-parallel matmul -> one dx all-reduce in
+        # backward instead of two (§Perf iteration C2).
+        return {
+            "w_gu": ParamMeta((L, d, 2 * F), ("layers", "embed", "ffn")),
+            "w_down": ParamMeta((L, F, d), ("layers", "ffn", "embed")),
+        }
+    # gelu MLP (starcoder2 / whisper)
+    return {
+        "w_in": ParamMeta((L, d, F), ("layers", "embed", "ffn")),
+        "b_in": ParamMeta((L, F), ("layers", "ffn"), "zeros"),
+        "w_out": ParamMeta((L, F, d), ("layers", "ffn", "embed")),
+        "b_out": ParamMeta((L, d), ("layers", "embed"), "zeros"),
+    }
+
+
+def _norm_metas(cfg: ModelConfig, L: int, names) -> Dict:
+    d = cfg.d_model
+    m = {}
+    for nm in names:
+        m[nm] = ParamMeta((L, d), ("layers", "embed"), "ones")
+        if cfg.norm == "ln":
+            m[nm + "_bias"] = ParamMeta((L, d), ("layers", "embed"), "zeros")
+    return m
+
+
+def abstract_params(cfg: ModelConfig) -> Dict:
+    L = cfg.n_layers
+    d = cfg.d_model
+    layers: Dict = {}
+    if cfg.mixer == "mla":
+        layers.update(_mla_metas(cfg, L))
+    elif cfg.mixer == "rwkv6":
+        layers.update(_rwkv_metas(cfg, L))
+    else:
+        layers.update(_attn_metas(cfg, L))
+        if cfg.mixer == "hymba":
+            layers.update(_mamba_metas(cfg, L))
+    if cfg.mixer != "rwkv6":  # rwkv's channel mix is its FFN
+        layers.update(_ffn_metas(cfg, L))
+    norm_names = ["norm1", "norm2"]
+    if cfg.is_encoder_decoder:
+        layers.update(_attn_metas(cfg, L, cross=True))
+        norm_names.append("norm3")
+    layers.update(_norm_metas(cfg, L, norm_names))
+
+    tree: Dict = {
+        "embed": ParamMeta((cfg.vocab_size, d), ("vocab", "embed")),
+        "lm_head": ParamMeta((cfg.vocab_size, d), ("vocab", "embed")),
+        "final_norm": ParamMeta((d,), ("embed",), "ones"),
+        "layers": layers,
+    }
+    if cfg.norm == "ln":
+        tree["final_norm_bias"] = ParamMeta((d,), ("embed",), "zeros")
+    if cfg.is_encoder_decoder:
+        E = cfg.n_encoder_layers
+        enc: Dict = {}
+        enc.update(_attn_metas(cfg, E))
+        enc.update(_ffn_metas(cfg, E))
+        enc.update(_norm_metas(cfg, E, ["norm1", "norm2"]))
+        tree["encoder"] = {
+            "layers": enc,
+            "final_norm": ParamMeta((d,), ("embed",), "ones"),
+        }
+        if cfg.norm == "ln":
+            tree["encoder"]["final_norm_bias"] = ParamMeta((d,), ("embed",), "zeros")
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Materialization / shapes / shardings
+# ---------------------------------------------------------------------------
+def _is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def init_params(cfg: ModelConfig, key: Array, dtype=None) -> Dict:
+    dtype = dtype or cfg.jnp_dtype
+    metas, treedef = jax.tree_util.tree_flatten(
+        abstract_params(cfg), is_leaf=_is_meta
+    )
+    keys = jax.random.split(key, len(metas))
+    leaves = []
+    for meta, k in zip(metas, keys):
+        if meta.init == "zeros":
+            leaves.append(jnp.zeros(meta.shape, dtype))
+        elif meta.init == "ones":
+            leaves.append(jnp.ones(meta.shape, dtype))
+        else:
+            leaves.append(
+                (jax.random.normal(k, meta.shape, jnp.float32) * meta.scale)
+                .astype(dtype)
+            )
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def param_shapes(cfg: ModelConfig, dtype=None) -> Dict:
+    dtype = dtype or cfg.jnp_dtype
+    return jax.tree_util.tree_map(
+        lambda m: jax.ShapeDtypeStruct(m.shape, dtype),
+        abstract_params(cfg),
+        is_leaf=_is_meta,
+    )
+
+
+def param_pspecs(cfg: ModelConfig, rules: ShardingRules) -> Dict:
+    return jax.tree_util.tree_map(
+        lambda m: rules.spec(*m.axes), abstract_params(cfg), is_leaf=_is_meta
+    )
+
+
+def param_shardings(cfg: ModelConfig, rules: ShardingRules) -> Dict:
+    from jax.sharding import NamedSharding
+
+    return jax.tree_util.tree_map(
+        lambda m: NamedSharding(rules.mesh, rules.spec(*m.axes)),
+        abstract_params(cfg),
+        is_leaf=_is_meta,
+    )
+
+
+def count_params(cfg: ModelConfig) -> int:
+    metas = jax.tree_util.tree_leaves(abstract_params(cfg), is_leaf=_is_meta)
+    return int(sum(np.prod(m.shape) for m in metas))

@@ -1,0 +1,95 @@
+"""RWKV6 (Finch) token/channel mixing — attention-free, data-dependent decay.
+
+Faithful to the RWKV6 recurrence
+
+    y_t = r_t . (S_{t-1} + (u * k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,   w_t = exp(-exp(base + lora(x_t)))
+
+with per-(head, channel) data-dependent decay w_t. Static token-shift mix
+coefficients stand in for RWKV6's LoRA token-shift (DESIGN.md §4 records the
+simplification). Carried state per layer:
+    wkv   (B, H, hd, hd)   matrix-valued wkv state
+    shift (B, D)           last normed input of the time-mix block
+    cm_shift (B, D)        last normed input of the channel-mix block
+
+The matrix state is the whole "KV cache": decode at 500k context carries
+O(H * hd^2), not O(S) — why this arch runs the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as nn
+
+Array = jax.Array
+
+
+def _project(x, xprev, mu, w):
+    return (x + mu * (xprev - x)) @ w
+
+
+def _decay(x, xprev, p):
+    xw = x + p["mu_w"] * (xprev - x)
+    lora = jnp.tanh(xw @ p["w_dd1"]) @ p["w_dd2"]
+    return jnp.exp(-jnp.exp((p["decay_base"] + lora).astype(jnp.float32)))
+
+
+def time_mix(
+    x: Array, p: Dict, state: Tuple[Array, Array], n_heads: int
+) -> Tuple[Array, Tuple[Array, Array]]:
+    """x: (B, S, D) normed input. state: (wkv (B,H,K,V), shift (B,D))."""
+    B, S, D = x.shape
+    H = n_heads
+    hd = D // H
+    wkv0, shift0 = state
+    xprev = nn.token_shift(x, shift0)
+
+    r = _project(x, xprev, p["mu_r"], p["w_r"]).reshape(B, S, H, hd)
+    k = _project(x, xprev, p["mu_k"], p["w_k"]).reshape(B, S, H, hd)
+    v = _project(x, xprev, p["mu_v"], p["w_v"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(_project(x, xprev, p["mu_g"], p["w_g"]))
+    w = _decay(x, xprev, p).reshape(B, S, H, hd)
+    u = p["bonus"].astype(jnp.float32)  # (H, hd)
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def step(S_carry, inputs):
+        r_t, k_t, v_t, w_t = inputs  # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,K,V)
+        y_t = jnp.einsum(
+            "bhk,bhkv->bhv", r_t, S_carry + u[None, :, :, None] * kv
+        )
+        S_new = w_t[..., None] * S_carry + kv
+        return S_new, y_t
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, w.astype(jnp.float32)))
+    wkv_final, y = jax.lax.scan(step, wkv0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(y, 0, 1)                                # (B,S,H,hd)
+    y = nn.group_norm_heads(y, p["ln_x"]).astype(x.dtype)
+    y = (y.reshape(B, S, D) * g) @ p["w_o"]
+    return y, (wkv_final.astype(wkv0.dtype), x[:, -1, :])
+
+
+def channel_mix(
+    x: Array, p: Dict, shift0: Array
+) -> Tuple[Array, Array]:
+    xprev = nn.token_shift(x, shift0)
+    out = nn.rwkv_channel_mix(
+        x, xprev, p["mu_ck"], p["mu_cr"], p["w_ck"], p["w_cv"], p["w_cr"]
+    )
+    return out, x[:, -1, :]
+
+
+def init_state(cfg, batch: int, dtype) -> Dict:
+    H, hd, D = cfg.n_heads, cfg.hd, cfg.d_model
+    L = cfg.n_layers
+    return {
+        "wkv": jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+        "shift": jnp.zeros((L, batch, D), dtype),
+        "cm_shift": jnp.zeros((L, batch, D), dtype),
+    }

@@ -1,0 +1,65 @@
+"""train_step / serve_step builders — the functions the launcher jits.
+
+Under pjit, data parallelism is implicit in the sharded global batch; the
+optimizer update runs on ZeRO-friendly sharded state. `serve_step` is one
+token of batched decoding against the KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import ShardingRules
+from ..optim.adamw import AdamWState, adamw_update, clip_by_global_norm
+from . import decode as dec
+from .model import RunConfig, forward, lm_loss
+
+Array = jax.Array
+
+
+def build_loss_fn(cfg: ModelConfig, rules: ShardingRules, run: RunConfig):
+    def loss_fn(params: Dict, batch: Dict) -> Array:
+        logits = forward(
+            cfg, params, batch["tokens"], rules, run,
+            vision_embeds=batch.get("vision_embeds"),
+            encoder_frames=batch.get("encoder_frames"),
+        )
+        return lm_loss(logits, batch["labels"])
+
+    return loss_fn
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    run: RunConfig,
+    lr: float = 3e-4,
+    max_grad_norm: float = 1.0,
+    weight_decay: float = 0.01,
+):
+    loss_fn = build_loss_fn(cfg, rules, run)
+
+    def train_step(params: Dict, opt_state: AdamWState, batch: Dict):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr=lr, weight_decay=weight_decay
+        )
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": opt_state.step}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_serve_step(cfg: ModelConfig, rules: ShardingRules, run: RunConfig):
+    def serve_step(params: Dict, cache: Dict, tokens: Array):
+        """One batched decode step: tokens (B, 1) -> (next (B,), cache)."""
+        logits, cache = dec.decode_step(cfg, params, cache, tokens, rules, run)
+        nxt = jnp.argmax(logits, axis=-1).astype(tokens.dtype)
+        return nxt, cache
+
+    return serve_step

@@ -1,0 +1,32 @@
+import os
+import sys
+
+# Tests run on the default single CPU device; multi-device tests spawn
+# subprocesses with XLA_FLAGS (see tests/_subproc.py) so this process never
+# forces a device count.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import graph
+
+
+@pytest.fixture(scope="session")
+def sensor120():
+    """Small connected sensor graph shared by core tests."""
+    g, _ = graph.connected_sensor_graph(
+        jax.random.PRNGKey(0), n=120, theta=0.2, kappa=0.25
+    )
+    return g
+
+
+@pytest.fixture(scope="session")
+def sensor_banded():
+    """Strip-sorted banded sensor graph for sharded-path tests."""
+    g, _ = graph.connected_sensor_graph(
+        jax.random.PRNGKey(1), n=600, theta=0.07, kappa=0.07
+    )
+    gs, _ = graph.spatial_sort(g)
+    return gs

@@ -1,0 +1,122 @@
+"""Section IV: coefficients, recurrence, unions, adjoints, error bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import chebyshev as cheb
+from repro.core import filters, wavelets
+from repro.core.multiplier import UnionMultiplier, graph_multiplier
+
+
+@pytest.fixture(scope="module")
+def setup(sensor120):
+    L = sensor120.laplacian()
+    lmax = sensor120.lambda_max_bound()
+    y = jax.random.normal(jax.random.PRNGKey(2), (sensor120.n_vertices,))
+    return sensor120, L, lmax, y
+
+
+def test_coeffs_exact_for_polynomials():
+    # g(x) = x on [0, lmax]: Tbar_0 = 1, Tbar_1 = (x - a)/a  =>  x = a + a*Tbar_1
+    lmax = 4.0
+    c = cheb.cheb_coeffs(lambda x: x, K=5, lmax=lmax)
+    a = lmax / 2
+    np.testing.assert_allclose(c[0], 2 * a, atol=1e-10)  # half-c0 convention
+    np.testing.assert_allclose(c[1], a, atol=1e-10)
+    np.testing.assert_allclose(c[2:], 0.0, atol=1e-10)
+
+
+def test_cheb_eval_matches_function():
+    lmax = 7.3
+    g = filters.tikhonov(1.0, 1)
+    c = cheb.cheb_coeffs(g, K=40, lmax=lmax)
+    lam = np.linspace(0, lmax, 200)
+    vals = np.asarray(cheb.cheb_eval(c, jnp.asarray(lam), lmax))
+    np.testing.assert_allclose(vals, g(lam), atol=1e-5)
+
+
+def test_apply_matches_exact_eigendecomposition(setup):
+    g, L, lmax, y = setup
+    op = graph_multiplier(L, filters.tikhonov(1.0), lmax, K=30)
+    err = float(jnp.linalg.norm(op.apply(y) - op.exact_apply(y)))
+    assert err / float(jnp.linalg.norm(y)) < 5e-3
+    # and the error respects the Prop. 4 bound
+    assert err <= op.error_bound() * float(jnp.linalg.norm(y)) + 1e-4
+
+
+def test_prop4_bound_union(setup):
+    g, L, lmax, y = setup
+    mults = wavelets.sgwt_multipliers(lmax, J=4)
+    op = UnionMultiplier(P=L, multipliers=mults, lmax=lmax, K=25)
+    diff = op.apply(y) - op.exact_apply(y)
+    lhs = float(jnp.linalg.norm(diff)) / float(jnp.linalg.norm(y))
+    assert lhs <= op.error_bound() + 1e-5
+
+
+def test_prop5_convergence_rate(setup):
+    """Smooth multipliers: B(K) decays fast in K (Prop. 5)."""
+    _, _, lmax, _ = setup
+    g = filters.heat(0.5)
+    bs = []
+    for K in (5, 10, 20, 40):
+        c = cheb.cheb_coeffs(g, K, lmax)
+        bs.append(cheb.approx_error_bound([g], c[None, :], lmax))
+    assert bs[1] < bs[0] and bs[2] < bs[1]
+    assert bs[3] <= bs[2]  # saturates at the f32 eval floor
+    assert bs[3] < 1e-6    # spectral convergence for analytic g
+
+
+def test_adjoint_identity(setup):
+    g, L, lmax, y = setup
+    mults = wavelets.sgwt_multipliers(lmax, J=3)
+    op = UnionMultiplier(P=L, multipliers=mults, lmax=lmax, K=20)
+    a = jax.random.normal(jax.random.PRNGKey(3), (op.eta, g.n_vertices))
+    lhs = float(jnp.sum(op.apply(y) * a))
+    rhs = float(jnp.sum(y * op.apply_adjoint(a)))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+
+def test_gram_equals_adjoint_of_apply(setup):
+    g, L, lmax, y = setup
+    mults = wavelets.sgwt_multipliers(lmax, J=3)
+    op = UnionMultiplier(P=L, multipliers=mults, lmax=lmax, K=15)
+    via_pair = op.apply_adjoint(op.apply(y))
+    via_gram = op.apply_gram(y)
+    np.testing.assert_allclose(np.asarray(via_pair), np.asarray(via_gram),
+                               atol=1e-3)
+
+
+def test_product_coeffs_identity():
+    """(sum c_k Tbar_k)^2 evaluated == product-coefficient series."""
+    lmax = 5.0
+    c1 = cheb.cheb_coeffs(filters.tikhonov(0.7), 12, lmax)
+    c2 = cheb.cheb_coeffs(filters.heat(0.3), 9, lmax)
+    prod = cheb.cheb_product_coeffs(c1, c2)
+    lam = jnp.linspace(0, lmax, 101)
+    lhs = cheb.cheb_eval(c1, lam, lmax) * cheb.cheb_eval(c2, lam, lmax)
+    rhs = cheb.cheb_eval(prod, lam, lmax)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=1e-5)
+
+
+def test_message_counts_match_paper(setup):
+    """Section IV-B/C: 2K|E| (apply), 2K|E| x eta (adjoint), 4K|E| (gram)."""
+    g, L, lmax, _ = setup
+    op = UnionMultiplier(P=L, multipliers=wavelets.sgwt_multipliers(lmax, 3),
+                         lmax=lmax, K=20)
+    mc = op.message_counts(g.n_edges)
+    assert mc["apply_messages"] == 2 * 20 * g.n_edges
+    assert mc["adjoint_message_len"] == 4
+    assert mc["gram_messages"] == 4 * 20 * g.n_edges
+
+
+def test_matrix_signal_apply(setup):
+    """SSL path: the recurrence is linear, columns processed jointly."""
+    g, L, lmax, _ = setup
+    op = graph_multiplier(L, filters.tikhonov(0.5), lmax, K=20)
+    Y = jax.random.normal(jax.random.PRNGKey(4), (g.n_vertices, 3))
+    joint = op.apply(Y)
+    for j in range(3):
+        np.testing.assert_allclose(
+            np.asarray(joint[:, j]), np.asarray(op.apply(Y[:, j])), atol=1e-4
+        )

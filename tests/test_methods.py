@@ -1,0 +1,142 @@
+"""Section III propositions + Section V alternative methods."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import arma, filters, jacobi
+from repro.core.multiplier import graph_multiplier
+
+
+@pytest.fixture(scope="module")
+def setup(sensor120):
+    N = sensor120.n_vertices
+    L = np.asarray(sensor120.laplacian())
+    Ln = np.asarray(sensor120.laplacian("normalized"))
+    y = np.asarray(jax.random.normal(jax.random.PRNGKey(5), (N,)))
+    return sensor120, L, Ln, jnp.asarray(y)
+
+
+def test_prop2_tikhonov_solves_regularization(setup):
+    """R y == argmin (tau/2)||f-y||^2 + f^T L^r f solved directly."""
+    g, L, _, y = setup
+    N = L.shape[0]
+    for tau, r in ((1.0, 1), (0.5, 2)):
+        op = graph_multiplier(jnp.asarray(L), filters.tikhonov(tau, r),
+                              g.lambda_max_bound(), K=60)
+        direct = np.linalg.solve(
+            np.linalg.matrix_power(L, r) + tau / 2 * np.eye(N),
+            tau / 2 * np.asarray(y),
+        )
+        np.testing.assert_allclose(np.asarray(op.apply(y)), direct, atol=2e-3)
+
+
+def test_prop3_inverse_filter(setup):
+    """h(L) y minimizes (tau/2)||y - Psi f||^2 + f^T L^r f."""
+    g, L, _, y = setup
+    N = L.shape[0]
+    tau, r = 1.0, 1
+    lmax = g.lambda_max_bound()
+    g_psi = filters.heat(0.3)
+    op = graph_multiplier(jnp.asarray(L), filters.inverse_filter(g_psi, tau, r),
+                          lmax, K=60)
+    lam, U = np.linalg.eigh(L)
+    Psi = U @ np.diag(g_psi(lam)) @ U.T
+    direct = np.linalg.solve(
+        np.linalg.matrix_power(L, r) + tau / 2 * Psi @ Psi,
+        tau / 2 * Psi @ np.asarray(y),
+    )
+    np.testing.assert_allclose(np.asarray(op.apply(y)), direct, atol=2e-3)
+
+
+def test_jacobi_converges_to_solution(setup):
+    g, _, Ln, y = setup
+    tau = 0.5
+    N = Ln.shape[0]
+    qmv, qdiag = jacobi.tikhonov_q(lambda x: jnp.asarray(Ln) @ x,
+                                   jnp.diag(jnp.asarray(Ln)), tau)
+    x = jacobi.jacobi_solve(qmv, qdiag, y, 300)
+    direct = np.linalg.solve((tau * np.eye(N) + Ln) / tau, np.asarray(y))
+    np.testing.assert_allclose(np.asarray(x), direct, atol=1e-4)
+
+
+def test_jacobi_chebyshev_accelerates(setup):
+    """Eq. (25) reaches lower error than plain Jacobi at equal iterations."""
+    g, _, Ln, y = setup
+    tau = 0.5
+    N = Ln.shape[0]
+    qmv, qdiag = jacobi.tikhonov_q(lambda x: jnp.asarray(Ln) @ x,
+                                   jnp.diag(jnp.asarray(Ln)), tau)
+    direct = np.linalg.solve((tau * np.eye(N) + Ln) / tau, np.asarray(y))
+    # spectral radius of Q_D^{-1} Q_O
+    Q = (tau * np.eye(N) + Ln) / tau
+    QD = np.diag(np.diag(Q))
+    rho = np.abs(np.linalg.eigvals(np.linalg.solve(QD, QD - Q))).max()
+    iters = 15
+    x_j = jacobi.jacobi_solve(qmv, qdiag, y, iters)
+    x_c = jacobi.jacobi_chebyshev_solve(qmv, qdiag, y, float(rho) * 1.001, iters)
+    e_j = np.linalg.norm(np.asarray(x_j) - direct)
+    e_c = np.linalg.norm(np.asarray(x_c) - direct)
+    assert e_c < e_j
+
+
+def test_arma_first_order_fixed_point(setup):
+    g, _, Ln, y = setup
+    tau = 0.5
+    N = Ln.shape[0]
+    r, p, const = arma.arma_tikhonov_first_order(tau, 2.0)
+    assert arma.arma_stable(p, 2.0)
+    x = arma.arma_apply(lambda v: jnp.asarray(Ln) @ v, y, r, p, 2.0,
+                        n_iters=300, const=const)
+    direct = np.linalg.solve((tau * np.eye(N) + Ln) / tau, np.asarray(y))
+    np.testing.assert_allclose(np.asarray(x), direct, atol=1e-3)
+
+
+def test_arma_second_order_matches_filter():
+    """Complex-pole ARMA for g = tau/(tau + lambda^2) (Section V-E)."""
+    lmax = 10.0
+    tau = 0.5
+    r, p, const = arma.arma_tikhonov_second_order(tau, lmax)
+    assert arma.arma_stable(p, lmax)
+    lam = np.linspace(0, lmax, 50)
+    np.testing.assert_allclose(
+        arma.arma_eval(r, p, lam, lmax, const=const), tau / (tau + lam**2),
+        atol=1e-10,
+    )
+
+
+def test_arma_random_walk_matches_filter():
+    tau = 0.5
+    r, p, const = arma.arma_random_walk_3(tau, 2.0)
+    lam = np.linspace(0, 1.9, 40)
+    h = filters.random_walk_kernel(2.0, 3)
+    np.testing.assert_allclose(
+        arma.arma_eval(r, p, lam, 2.0, const=const), tau / (tau + h(lam)),
+        atol=1e-9,
+    )
+
+
+def test_chebyshev_beats_alternatives_at_equal_communication(setup):
+    """The paper's Fig. 2(a) qualitative claim: at equal message rounds,
+    the Chebyshev approximation error is lowest for S = L_norm."""
+    g, _, Ln, _ = setup
+    N = Ln.shape[0]
+    tau = 0.5
+    key = jax.random.PRNGKey(7)
+    f = jax.random.uniform(key, (N,), minval=-10, maxval=10)
+    gfwd = filters.fig2_target(filters.power_kernel(1), tau)
+    lam, U = np.linalg.eigh(Ln)
+    y = jnp.asarray(U @ np.diag(gfwd(lam)) @ U.T @ np.asarray(f))
+    K = 12
+    op = graph_multiplier(jnp.asarray(Ln),
+                          filters.ssl_multiplier(filters.power_kernel(1), tau),
+                          2.0, K=K)
+    e_cheb = float(jnp.linalg.norm(op.apply(y) - f))
+    qmv, qdiag = jacobi.tikhonov_q(lambda x: jnp.asarray(Ln) @ x,
+                                   jnp.diag(jnp.asarray(Ln)), tau)
+    e_jac = float(jnp.linalg.norm(jacobi.jacobi_solve(qmv, qdiag, y, K) - f))
+    r, p, const = arma.arma_tikhonov_first_order(tau, 2.0)
+    x_arma = arma.arma_apply(lambda v: jnp.asarray(Ln) @ v, y, r, p, 2.0,
+                             n_iters=K, const=const)
+    e_arma = float(jnp.linalg.norm(x_arma - f))
+    assert e_cheb < e_jac and e_cheb < e_arma

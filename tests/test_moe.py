@@ -1,0 +1,57 @@
+"""MoE dispatch invariants: baseline vs grouped, capacity semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    T, d, E, F, k = 64, 16, 8, 32, 2
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (T, d))
+    router = jax.random.normal(ks[1], (d, E))
+    wg = jax.random.normal(ks[2], (E, d, F)) * 0.1
+    wu = jax.random.normal(ks[3], (E, d, F)) * 0.1
+    wd = jax.random.normal(ks[4], (E, F, d)) * 0.1
+    return x, router, wg, wu, wd, k
+
+
+def test_grouped_equals_global_at_high_capacity(setup):
+    x, router, wg, wu, wd, k = setup
+    y0 = moe.moe_ffn(x, router, wg, wu, wd, top_k=k, capacity_factor=8.0)
+    for G in (1, 2, 4, 8):
+        y1 = moe.moe_ffn_grouped(x, router, wg, wu, wd, top_k=k,
+                                 capacity_factor=8.0, n_groups=G)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=1e-5)
+
+
+def test_capacity_drop_reduces_output_norm(setup):
+    """Dropped assignments zero their contribution (capacity semantics)."""
+    x, router, wg, wu, wd, k = setup
+    y_full = moe.moe_ffn(x, router, wg, wu, wd, top_k=k, capacity_factor=8.0)
+    y_tight = moe.moe_ffn(x, router, wg, wu, wd, top_k=k, capacity_factor=0.25)
+    assert float(jnp.linalg.norm(y_tight)) < float(jnp.linalg.norm(y_full))
+    assert bool(jnp.isfinite(y_tight).all())
+
+
+def test_grouped_differentiable(setup):
+    x, router, wg, wu, wd, k = setup
+
+    def loss(x, wg):
+        return jnp.sum(moe.moe_ffn_grouped(
+            x, router, wg, wu, wd, top_k=k, capacity_factor=2.0,
+            n_groups=4) ** 2)
+
+    g1, g2 = jax.grad(loss, argnums=(0, 1))(x, wg)
+    assert bool(jnp.isfinite(g1).all()) and bool(jnp.isfinite(g2).all())
+    assert float(jnp.abs(g2).max()) > 0
+
+
+def test_capacity_helper():
+    assert moe.capacity(1024, 8, 2, 1.0) == 256
+    assert moe.capacity(10, 8, 2, 1.0) >= 8      # floor at `multiple`
+    assert moe.capacity(1024, 8, 2, 10.0) <= 1024  # never above n_tokens

@@ -1,0 +1,115 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chebyshev as cheb
+from repro.core import filters, graph, lasso
+from repro.core.multiplier import graph_multiplier
+from repro.dist import gossip
+
+SET = dict(max_examples=15, deadline=None)
+
+
+def _graph(seed, n=40):
+    key = jax.random.PRNGKey(seed)
+    g = graph.sensor_graph(key, n=n, theta=0.3, kappa=0.45)
+    return g
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 50), tau=st.floats(0.1, 5.0),
+       a=st.floats(-3, 3), b=st.floats(-3, 3))
+def test_multiplier_linearity(seed, tau, a, b):
+    """Phi~(a f + b h) == a Phi~ f + b Phi~ h (operator linearity)."""
+    g = _graph(seed)
+    lmax = g.lambda_max_bound()
+    op = graph_multiplier(g.laplacian(), filters.tikhonov(tau), lmax, K=10)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 1))
+    f = jax.random.normal(k1, (g.n_vertices,))
+    h = jax.random.normal(k2, (g.n_vertices,))
+    lhs = op.apply(a * f + b * h)
+    rhs = a * op.apply(f) + b * op.apply(h)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               atol=1e-3, rtol=1e-3)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 50))
+def test_permutation_equivariance(seed):
+    """Relabeling vertices commutes with the operator: Phi(Pi W) = Pi Phi(W)."""
+    g = _graph(seed)
+    lmax = g.lambda_max_bound()
+    rng = np.random.RandomState(seed)
+    perm = rng.permutation(g.n_vertices)
+    W2 = np.asarray(g.W)[np.ix_(perm, perm)]
+    f = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (g.n_vertices,)))
+    op1 = graph_multiplier(g.laplacian(), filters.heat(0.4), lmax, K=12)
+    op2 = graph_multiplier(graph.laplacian(jnp.asarray(W2)),
+                           filters.heat(0.4), lmax, K=12)
+    out1 = np.asarray(op1.apply(jnp.asarray(f)))
+    out2 = np.asarray(op2.apply(jnp.asarray(f[perm])))
+    np.testing.assert_allclose(out1[perm], out2, atol=1e-3)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 50), t=st.floats(0.05, 2.0))
+def test_heat_kernel_preserves_constants(seed, t):
+    """g(0) = 1 for the heat kernel and constants are L's null space, so
+    constant signals pass through (mass preservation)."""
+    g = _graph(seed)
+    lmax = g.lambda_max_bound()
+    op = graph_multiplier(g.laplacian(), filters.heat(t), lmax, K=25)
+    const = jnp.ones((g.n_vertices,)) * 3.7
+    np.testing.assert_allclose(np.asarray(op.apply(const)),
+                               np.asarray(const), atol=2e-2)
+
+
+@settings(**SET)
+@given(z=st.lists(st.floats(-10, 10), min_size=1, max_size=30),
+       t=st.floats(0.0, 3.0))
+def test_soft_threshold_nonexpansive(z, t):
+    zz = jnp.asarray(z, jnp.float32)
+    out = lasso.soft_threshold(zz, t)
+    assert np.all(np.asarray(jnp.abs(out) <= jnp.abs(zz) + 1e-6))
+    # 1-Lipschitz
+    z2 = zz + 0.1
+    out2 = lasso.soft_threshold(z2, t)
+    assert np.all(np.asarray(jnp.abs(out2 - out) <= 0.1 + 1e-6))
+
+
+@settings(**SET)
+@given(k1=st.integers(1, 10), k2=st.integers(1, 10), seed=st.integers(0, 99))
+def test_cheb_product_identity(k1, k2, seed):
+    rng = np.random.RandomState(seed)
+    c1 = rng.randn(k1 + 1)
+    c2 = rng.randn(k2 + 1)
+    prod = cheb.cheb_product_coeffs(c1, c2)
+    lam = jnp.linspace(0, 3.0, 37)
+    lhs = (np.asarray(cheb.cheb_eval(c1, lam, 3.0))
+           * np.asarray(cheb.cheb_eval(c2, lam, 3.0)))
+    rhs = np.asarray(cheb.cheb_eval(prod, lam, 3.0))
+    np.testing.assert_allclose(lhs, rhs, atol=1e-6 * max(1, np.abs(lhs).max()))
+
+
+@settings(**SET)
+@given(n=st.sampled_from([2, 4, 6, 8, 12, 16]))
+def test_gossip_consensus_filter_exact(n):
+    c = gossip.consensus_coeffs(n)
+    assert gossip.consensus_error(n, c) < 1e-6  # f32 eval floor
+    assert len(c) == int(np.ceil(n / 2)) + 1
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 30), K=st.integers(3, 25))
+def test_bound_B_respected_on_spectrum(seed, K):
+    """|g - p_K| on the actual eigenvalues is within B(K) (grid sup)."""
+    g = _graph(seed)
+    lmax = g.lambda_max_bound()
+    gf = filters.tikhonov(1.0)
+    c = cheb.cheb_coeffs(gf, K, lmax)
+    B = cheb.approx_error_bound([gf], c[None], lmax)
+    lam = np.linalg.eigvalsh(np.asarray(g.laplacian()))
+    vals = np.asarray(cheb.cheb_eval(c, jnp.asarray(lam), lmax))
+    assert np.max(np.abs(vals - gf(lam))) <= B + 1e-6

@@ -1,0 +1,112 @@
+"""Sharding rules + roofline parser unit tests (no multi-device needed —
+specs are pure metadata)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import ShardingRules, make_rules
+from repro.launch.roofline import Roofline, collective_stats, _type_bytes
+
+
+class FakeMesh:
+    """Duck-typed mesh: rules only need axis_names/axis_sizes."""
+
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        self.axis_sizes = tuple(sizes.values())
+
+
+def test_default_scheme_tp_axes():
+    r = make_rules.__wrapped__ if hasattr(make_rules, "__wrapped__") else None
+    rules = ShardingRules(
+        mapping={"batch": ("pod", "data"), "heads": "model", "embed": None},
+        mesh=FakeMesh({"data": 16, "model": 16}),
+    )
+    assert rules.spec("batch", "seq", "embed") == P("data", None, None)
+    assert rules.spec(None, "heads") == P(None, "model")
+
+
+def test_spec_deduplicates_mesh_axes():
+    rules = ShardingRules(
+        mapping={"batch": ("data", "model"), "embed": ("data", "model")},
+        mesh=FakeMesh({"data": 16, "model": 16}),
+    )
+    # batch consumes both axes; embed must come out unsharded
+    spec = rules.spec("batch", "embed")
+    assert spec == P(("data", "model"), None)
+
+
+def test_fsdp_scheme_weights_vs_activations():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    from repro.dist.sharding import _BASE, _SCHEMES
+
+    mapping = dict(_BASE)
+    mapping.update(_SCHEMES["fsdp"])
+    rules = ShardingRules(mapping=mapping, mesh=mesh)
+    # weights: embed fully sharded, no TP on heads
+    assert rules.spec("layers", "embed", "heads") == P(None, ("data", "model"), None)
+    # activations: batch eats all axes, embed unsharded
+    assert rules.spec("batch", "seq", "embed") == P(("data", "model"), None, None)
+    # MoE: groups on data, experts on model
+    assert rules.spec("moe_group", "expert", None, None) == P("data", "model", None, None)
+
+
+def test_null_rules_are_noops():
+    rules = ShardingRules.null()
+    x = jax.numpy.ones((4, 4))
+    assert rules.constrain(x, "batch", "embed") is x
+    assert rules.spec("batch") == P(None)
+
+
+# ---------------------------------------------------------------------------
+# roofline HLO parsing
+# ---------------------------------------------------------------------------
+def test_type_bytes():
+    assert _type_bytes("f32[16,4096]") == 16 * 4096 * 4
+    assert _type_bytes("(bf16[8,2], f32[4])") == 8 * 2 * 2 + 4 * 4
+    assert _type_bytes("f8e4m3fn[10]") == 10
+    assert _type_bytes("pred[]") == 1
+
+
+def test_collective_stats_parses_ops():
+    hlo = """
+  %ar = f32[16,1024]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256]
+  %ag = bf16[4,512]{1,0} all-gather(%y), dimensions={0}
+  %cp = f32[8]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %not_a_coll = f32[2]{0} add(%a, %b)
+"""
+    st = collective_stats(hlo, top_k=3)
+    assert st["count_by_op"]["all-reduce"] == 1
+    assert st["count_by_op"]["all-gather"] == 1
+    assert st["count_by_op"]["collective-permute"] == 1
+    ar_bytes = 16 * 1024 * 4 * 2  # x2 ring multiplier
+    assert st["bytes_by_op"]["all-reduce"] == ar_bytes
+    # bf16 correction halves the f32 AR contribution
+    assert st["collective_bytes_bf16_corrected"] == (
+        st["collective_bytes_per_device"] - ar_bytes // 2)
+    assert st["top_collectives"][0]["op"] == "all-reduce"
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline(flops_per_device=197e12, bytes_per_device=819e9 / 2,
+                 collective_bytes_per_device=50e9 / 4)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 0.5) < 1e-9
+    assert abs(r.collective_s - 0.25) < 1e-9
+    assert r.dominant == "compute"
+    assert abs(r.compute_fraction - 1.0) < 1e-9
+
+
+def test_fit_spec_trims_uneven_dims():
+    from repro.launch.dryrun import _fit_one
+
+    mesh = FakeMesh({"data": 16, "model": 16})
+    spec = _fit_one(jax.ShapeDtypeStruct((1, 2048), np.float32),
+                    P("data", "model"), mesh)
+    assert spec == P(None, "model")   # batch=1 can't shard
+    spec = _fit_one(jax.ShapeDtypeStruct((40,), np.float32), P("model"), mesh)
+    assert spec == P(None)            # 40 % 16 != 0
+    spec = _fit_one(jax.ShapeDtypeStruct((256, 64), np.float32),
+                    P(("data", "model"), None), mesh)
+    assert spec == P(("data", "model"), None)

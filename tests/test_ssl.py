@@ -1,0 +1,37 @@
+"""Section III-D: distributed semi-supervised classification."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import filters, graph, ssl
+
+
+def test_two_cluster_classification():
+    g, labels = graph.two_cluster_graph(jax.random.PRNGKey(3), n_per=25)
+    mask = jnp.zeros(50, bool).at[jnp.array([0, 1, 25, 26])].set(True)
+    res = ssl.semi_supervised_classify(
+        g.laplacian("normalized"), labels, mask, 2, tau=0.5, lmax=2.0
+    )
+    assert ssl.accuracy(res, labels, mask) > 0.95
+
+
+def test_kernel_variants_all_classify():
+    g, labels = graph.two_cluster_graph(jax.random.PRNGKey(4), n_per=20)
+    mask = jnp.zeros(40, bool).at[jnp.array([0, 20])].set(True)
+    Ln = g.laplacian("normalized")
+    for h in (filters.power_kernel(1), filters.power_kernel(2),
+              filters.diffusion_kernel(1.0), filters.inverse_cosine_kernel(),
+              filters.random_walk_kernel(2.0, 2)):
+        res = ssl.semi_supervised_classify(Ln, labels, mask, 2, h=h,
+                                           tau=0.5, lmax=2.0)
+        assert ssl.accuracy(res, labels, mask) > 0.8, h
+
+
+def test_label_matrix_construction():
+    labels = jnp.array([0, 1, 2, 1])
+    mask = jnp.array([True, True, False, False])
+    Y = ssl.label_matrix(labels, mask, 3)
+    expect = np.zeros((4, 3), np.float32)
+    expect[0, 0] = 1
+    expect[1, 1] = 1
+    np.testing.assert_array_equal(np.asarray(Y), expect)

@@ -1,0 +1,131 @@
+"""Section VI: SGWT frame + distributed lasso (Algorithm 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lasso, wavelets
+from repro.core.multiplier import UnionMultiplier
+from repro.data.pipeline import graph_signal_batch
+
+
+@pytest.fixture(scope="module")
+def op(sensor120):
+    lmax = sensor120.lambda_max_bound()
+    return UnionMultiplier(
+        P=sensor120.laplacian(),
+        multipliers=wavelets.sgwt_multipliers(lmax, J=4),
+        lmax=lmax, K=20,
+    )
+
+
+def test_frame_bounds_positive(sensor120):
+    lmax = sensor120.lambda_max_bound()
+    A, B = wavelets.frame_bounds(wavelets.sgwt_multipliers(lmax, J=4), lmax)
+    assert A > 0 and B < np.inf and B / A < 100
+
+
+def test_wavelet_kernel_shape():
+    g = wavelets.wavelet_kernel()
+    # bandpass: zero at origin, unit at the spline knots, decay at infinity
+    assert abs(g(0.0)) < 1e-12
+    np.testing.assert_allclose(g(1.0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(g(2.0), 1.0, atol=1e-12)
+    assert g(50.0) < 2e-3
+
+
+def test_ista_objective_decreases(op, sensor120):
+    y = jax.random.normal(jax.random.PRNGKey(8), (sensor120.n_vertices,))
+    gamma = lasso.ista_step_size(op)
+    res = lasso.distributed_lasso(op, y, mu=0.1, gamma=gamma, n_iters=40,
+                                  record_objective=True)
+    obj = np.asarray(res.objective)
+    assert obj[-1] <= obj[0]
+    assert np.all(np.diff(obj) < 1e-3)  # monotone within tolerance
+
+
+def test_lasso_denoises_piecewise_signal(sensor120):
+    """Paper Section VI experiment, reduced: lasso MSE < noisy MSE."""
+    key = jax.random.PRNGKey(9)
+    f0 = graph_signal_batch(key, sensor120.coords, "piecewise")
+    noise = 0.5 * jax.random.normal(key, f0.shape)
+    y = f0 + noise
+    lmax = sensor120.lambda_max_bound()
+    op = UnionMultiplier(P=sensor120.laplacian(),
+                         multipliers=wavelets.sgwt_multipliers(lmax, J=4),
+                         lmax=lmax, K=15)
+    mu = jnp.array([0.01] + [0.75] * 4)
+    res = lasso.distributed_lasso(op, y, mu=mu, gamma=lasso.ista_step_size(op),
+                                  n_iters=100)
+    mse_noisy = float(jnp.mean((y - f0) ** 2))
+    mse_lasso = float(jnp.mean((res.signal - f0) ** 2))
+    assert mse_lasso < mse_noisy
+
+
+def test_soft_threshold_properties():
+    z = jnp.linspace(-3, 3, 101)
+    out = lasso.soft_threshold(z, 0.5)
+    assert float(jnp.max(jnp.abs(out))) <= 2.5 + 1e-6       # shrinks by t
+    assert np.all(np.asarray(jnp.abs(out) <= jnp.abs(z)))    # nonexpansive
+    assert np.all(np.asarray(out[jnp.abs(z) <= 0.5]) == 0.0)  # dead zone
+
+
+def test_lasso_cross_validation_picks_sane_mu(sensor120):
+    """Section VI optional extension: distributed CV over the lasso weights.
+    Extreme weights (0 = no shrinkage of noise, huge = kill signal) must
+    not win against a moderate one on a noisy piecewise field."""
+    key = jax.random.PRNGKey(10)
+    f0 = graph_signal_batch(key, sensor120.coords, "piecewise")
+    y = f0 + 0.5 * jax.random.normal(key, f0.shape)
+    lmax = sensor120.lambda_max_bound()
+    op = UnionMultiplier(P=sensor120.laplacian(),
+                         multipliers=wavelets.sgwt_multipliers(lmax, J=3),
+                         lmax=lmax, K=12)
+    gamma = lasso.ista_step_size(op)
+    grid = [0.0, 0.5, 50.0]
+    best, scores = lasso.lasso_cross_validate(
+        op, y, grid, jax.random.PRNGKey(1), n_folds=2, gamma=gamma,
+        n_iters=60)
+    assert len(scores) == 3 and all(np.isfinite(scores))
+    # mu = 50 kills the signal entirely — CV must reject it
+    assert best != 50.0 and scores[2] > min(scores), (best, scores)
+
+
+def test_prop6_lasso_perturbation_bound(sensor120):
+    """Prop. 6 / Eq. (34): || Phi~* a~* - Phi* a* ||^2 <=
+    (||y||^3 / min mu) * B(K) * sqrt(J+1), with a* from the exact operator
+    and a~* from the Chebyshev approximation."""
+    import numpy as _np
+    from repro.core import chebyshev as cheb
+
+    key = jax.random.PRNGKey(12)
+    y = jax.random.normal(key, (sensor120.n_vertices,))
+    lmax = sensor120.lambda_max_bound()
+    J, K = 3, 10  # low K so the bound is non-trivial
+    mults = wavelets.sgwt_multipliers(lmax, J=J)
+    op = UnionMultiplier(P=sensor120.laplacian(), multipliers=mults,
+                         lmax=lmax, K=K)
+
+    class Exact:
+        def __init__(self, op):
+            lam, U = _np.linalg.eigh(_np.asarray(op.P))
+            self.mats = [jnp.asarray(U @ _np.diag(_np.asarray(g(lam))) @ U.T)
+                         for g in op.multipliers]
+            self.eta = op.eta
+
+        def apply(self, f):
+            return jnp.stack([M @ f for M in self.mats])
+
+        def apply_adjoint(self, a):
+            return sum(M @ a[j] for j, M in enumerate(self.mats))
+
+    mu = 0.3
+    gamma = lasso.ista_step_size(op) * 0.5
+    res_apx = lasso.distributed_lasso(op, y, mu=mu, gamma=gamma, n_iters=400)
+    res_ex = lasso.distributed_lasso(Exact(op), y, mu=mu, gamma=gamma,
+                                     n_iters=400)
+    lhs = float(jnp.sum((res_apx.signal - res_ex.signal) ** 2))
+    BK = cheb.approx_error_bound(mults, op.coeffs, lmax)
+    rhs = float(jnp.linalg.norm(y)) ** 3 / mu * BK * np.sqrt(J + 1)
+    assert lhs <= rhs, (lhs, rhs)
+    assert lhs > 0  # operators genuinely differ at K=10
