@@ -10,15 +10,48 @@ Also reports the TPU halo-byte analog of the sharded path."""
 import jax
 import numpy as np
 
-from repro.core import distributed as dist
 from repro.core import graph
-from repro.core.multiplier import UnionMultiplier
 from repro.core.wavelets import sgwt_multipliers
+from repro.dist import GraphOperator
+from repro.dist.backends import halo as dist
 
-from .common import row
+from .common import make_backend_plan, row, write_json
 
 
-def run():
+def sweep_backends(backends, json_dir=".", K=20, J=6):
+    """Per-backend communication model through the plan API: the paper's
+    scalar-message accounting plus each backend's collective-byte model."""
+    key = jax.random.PRNGKey(0)
+    g, key = graph.connected_sensor_graph(key, n=600, theta=0.07, kappa=0.07)
+    gs, _ = graph.spatial_sort(g)
+    lmax = gs.lambda_max_bound()
+    op = GraphOperator(P=gs.laplacian(),
+                       multipliers=sgwt_multipliers(lmax, J),
+                       lmax=lmax, K=K)
+    mc = op.message_counts(g.n_edges)
+    for backend in backends:
+        plan = make_backend_plan(op, backend)
+        bytes_model = {k: v for k, v in plan.info.items()
+                       if "bytes" in k or k in ("n_shards", "mesh_axis")}
+        row(f"comm_plan_{backend}", 0.0,
+            f"E={g.n_edges};apply_msgs={mc['apply_messages']};"
+            + ";".join(f"{k}={v}" for k, v in bytes_model.items()))
+        write_json(json_dir, f"bench_comm_{backend}", {
+            "bench": "comm",
+            "backend": backend,
+            "n": g.n_vertices,
+            "E": g.n_edges,
+            "K": K,
+            "eta": op.eta,
+            "device_count": len(jax.devices()),
+            "paper_message_counts": mc,
+            "plan_info": dict(plan.info),
+        })
+
+
+def run(backends=None, json_dir="."):
+    if backends:
+        sweep_backends(backends, json_dir)
     key = jax.random.PRNGKey(0)
     K, J = 20, 6
     for n in (125, 250, 500, 1000):
@@ -28,7 +61,7 @@ def run():
                                               kappa=kappa)
         E = g.n_edges
         lmax = g.lambda_max_bound()
-        op = UnionMultiplier(P=g.laplacian(),
+        op = GraphOperator(P=g.laplacian(),
                              multipliers=sgwt_multipliers(lmax, J),
                              lmax=lmax, K=K)
         mc = op.message_counts(E)

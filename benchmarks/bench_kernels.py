@@ -8,12 +8,49 @@ import numpy as np
 
 from repro.core import chebyshev as cheb
 from repro.core import filters, graph
+from repro.dist import GraphOperator
 from repro.kernels import ops, ref
 
-from .common import row, time_fn
+from .common import make_backend_plan, row, time_fn, write_json
 
 
-def run():
+def sweep_backends(backends, json_dir="."):
+    """Time plan.apply/apply_adjoint/apply_gram per backend through the one
+    GraphOperator.plan() entry point; one comparable JSON per backend."""
+    key = jax.random.PRNGKey(0)
+    g, key = graph.connected_sensor_graph(key, n=500, theta=0.075,
+                                          kappa=0.075)
+    gs, _ = graph.spatial_sort(g)  # banded order so 'halo' is exact
+    lmax = gs.lambda_max_bound()
+    op = GraphOperator(P=gs.laplacian(),
+                       multipliers=[filters.tikhonov(1.0), filters.heat(0.5)],
+                       lmax=lmax, K=20)
+    f = jax.random.normal(key, (g.n_vertices,))
+    a = jax.random.normal(key, (op.eta, g.n_vertices))
+    for backend in backends:
+        plan = make_backend_plan(op, backend)
+        results = {}
+        for fn_name, fn, arg in (("apply", plan.apply, f),
+                                 ("apply_adjoint", plan.apply_adjoint, a),
+                                 ("apply_gram", plan.apply_gram, f)):
+            us = time_fn(jax.jit(fn), arg)
+            results[f"{fn_name}_us"] = us
+            row(f"plan_{fn_name}_{backend}", us, f"n=500;K={op.K};eta={op.eta}")
+        write_json(json_dir, f"bench_kernels_{backend}", {
+            "bench": "kernels",
+            "backend": backend,
+            "n": g.n_vertices,
+            "K": op.K,
+            "eta": op.eta,
+            "device_count": len(jax.devices()),
+            "results": results,
+            "plan_info": dict(plan.info),
+        })
+
+
+def run(backends=None, json_dir="."):
+    if backends:
+        sweep_backends(backends, json_dir)
     key = jax.random.PRNGKey(0)
     g, key = graph.connected_sensor_graph(key, n=500)
     L = np.asarray(g.laplacian())

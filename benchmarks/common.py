@@ -22,3 +22,22 @@ def time_fn(fn, *args, warmup=2, iters=10):
 
 def row(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def write_json(json_dir, name, payload):
+    """Write one benchmark result dict as <json_dir>/<name>.json."""
+    import json
+    import os
+
+    os.makedirs(json_dir, exist_ok=True)
+    path = os.path.join(json_dir, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+    print(f"# wrote {path}", flush=True)
+    return path
+
+
+def make_backend_plan(op, backend):
+    """Plan `op` under `backend` (sharded backends default to a 1-D mesh
+    over every visible device)."""
+    return op.plan(backend)

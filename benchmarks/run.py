@@ -1,10 +1,14 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run --only kernels,comm \
+        --backend dense,pallas,halo,allgather [--json-dir bench-out]
 
-Prints ``name,us_per_call,derived`` CSV rows. --full uses paper-scale trial
+Prints ``name,us_per_call,derived`` CSV rows.  --full uses paper-scale trial
 counts (slow on CPU); the default is a reduced but statistically meaningful
-configuration.
+configuration.  --backend sweeps bench_kernels/bench_comm through the
+`GraphOperator.plan()` API for each named backend and writes one comparable
+JSON file per backend to --json-dir.
 """
 import argparse
 import sys
@@ -16,11 +20,18 @@ def main() -> None:
                     help="paper-scale trial counts")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig2,lasso,comm,kernels")
+    ap.add_argument("--backend", default=None,
+                    help="comma-separated execution backends to sweep "
+                    "(dense,pallas,halo,allgather) through the plan API; "
+                    "one JSON per backend is written to --json-dir")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for per-backend JSON results")
     args = ap.parse_args()
 
     from . import (bench_comm, bench_fig1_denoising, bench_fig2_methods,
                    bench_kernels, bench_lasso)
 
+    backends = args.backend.split(",") if args.backend else None
     wanted = set((args.only or "fig1,fig2,lasso,comm,kernels").split(","))
     print("name,us_per_call,derived")
     if "fig1" in wanted:
@@ -31,9 +42,9 @@ def main() -> None:
         bench_lasso.run(n_trials=20 if args.full else 4,
                         n_iters=300 if args.full else 120)
     if "comm" in wanted:
-        bench_comm.run()
+        bench_comm.run(backends=backends, json_dir=args.json_dir)
     if "kernels" in wanted:
-        bench_kernels.run()
+        bench_kernels.run(backends=backends, json_dir=args.json_dir)
 
 
 if __name__ == "__main__":

@@ -21,15 +21,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SENSOR500
-from repro.core import distributed as dist
-from repro.core import filters, graph, lasso, wavelets
-from repro.core.multiplier import UnionMultiplier, graph_multiplier
+from repro.core import filters, graph, wavelets
+from repro.core.multiplier import graph_multiplier
 from repro.data.pipeline import graph_signal_batch
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sharded", action="store_true")
+    ap.add_argument("--backend", default=None,
+                    help="explicit execution backend (default: dense, or "
+                    "halo with --sharded)")
     ap.add_argument("--iters", type=int, default=150)
     args = ap.parse_args()
 
@@ -43,37 +45,33 @@ def main():
     lmax = g.lambda_max_bound()
     mu = jnp.array([p.lasso_mu_scaling]
                    + [p.lasso_mu_wavelet] * p.n_wavelet_scales)
-    op = UnionMultiplier(
-        P=g.laplacian(),
-        multipliers=wavelets.sgwt_multipliers(lmax, p.n_wavelet_scales),
-        lmax=lmax, K=p.lasso_K,
-    )
+    op = wavelets.sgwt_operator(g.laplacian(), lmax,
+                                J=p.n_wavelet_scales, K=p.lasso_K)
 
     tik = graph_multiplier(g.laplacian(), filters.tikhonov(p.tau, p.r),
                            lmax, K=p.K).apply(y)
 
-    if args.sharded:
+    backend = args.backend or ("halo" if args.sharded else "dense")
+    if backend in ("halo", "allgather"):
         n_dev = len(jax.devices())
         assert n_dev >= 8, "run with XLA_FLAGS=--xla_force_host_platform_device_count=8"
         gs, order = graph.spatial_sort(g)
-        parts, leak = dist.partition_banded(np.asarray(gs.laplacian()), 8)
-        print(f"sharded over 8 devices; banded-partition leak={leak}")
         mesh = jax.make_mesh((8,), ("graph",),
                              axis_types=(jax.sharding.AxisType.Auto,))
         lmax_s = gs.lambda_max_bound()
-        op_s = UnionMultiplier(
-            P=gs.laplacian(),
-            multipliers=wavelets.sgwt_multipliers(lmax_s, p.n_wavelet_scales),
-            lmax=lmax_s, K=p.lasso_K)
-        ypad = dist.pad_signal(y[order], parts)
-        _, y_star = dist.dist_lasso(mesh, parts, ypad, op_s.coeffs, lmax_s,
-                                    mu, gamma=p.lasso_gamma,
-                                    n_iters=args.iters)
-        signal = jnp.zeros_like(y).at[np.asarray(order)].set(
-            y_star[: g.n_vertices])
+        op_s = wavelets.sgwt_operator(gs.laplacian(), lmax_s,
+                                      J=p.n_wavelet_scales, K=p.lasso_K)
+        plan = op_s.plan(backend, mesh=mesh)
+        print(f"backend={backend} over 8 devices; "
+              f"plan info: {plan.info}")
+        res = plan.solve_lasso(y[jnp.asarray(order)], mu,
+                               gamma=p.lasso_gamma, n_iters=args.iters)
+        signal = jnp.zeros_like(y).at[np.asarray(order)].set(res.signal)
     else:
-        res = lasso.distributed_lasso(op, y, mu=mu, gamma=p.lasso_gamma,
-                                      n_iters=args.iters)
+        plan = op.plan(backend)
+        print(f"backend={backend}; plan info: {plan.info}")
+        res = plan.solve_lasso(y, mu, gamma=p.lasso_gamma,
+                               n_iters=args.iters)
         signal = res.signal
 
     print(f"MSE noisy    : {float(jnp.mean((y - f0) ** 2)):.4f}  (paper 0.250)")

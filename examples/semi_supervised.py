@@ -11,13 +11,21 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import argparse
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import filters, graph, ssl
+from repro.dist import available_backends
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="dense",
+                    choices=available_backends(),
+                    help="execution backend for the label propagation")
+    args = ap.parse_args()
     key = jax.random.PRNGKey(3)
     g, labels = graph.two_cluster_graph(key, n_per=25, p_in=0.85, p_out=0.06)
     mask = jnp.zeros(50, bool).at[jnp.array([0, 1, 25, 26])].set(True)
@@ -32,7 +40,8 @@ def main():
     Ln = g.laplacian("normalized")
     for name, h in kernels.items():
         res = ssl.semi_supervised_classify(Ln, labels, mask, 2, h=h,
-                                           tau=0.5, lmax=2.0, K=20)
+                                           tau=0.5, lmax=2.0, K=20,
+                                           backend=args.backend)
         acc = ssl.accuracy(res, labels, mask)
         print(f"  {name:34s} accuracy on unlabeled: {acc:.3f}")
 

@@ -1,0 +1,101 @@
+"""Stub implementation of the hypothesis API subset (see package docstring)."""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+from typing import Any, Callable, Dict
+
+from . import strategies
+
+__all__ = ["given", "settings", "strategies", "HealthCheck", "example"]
+
+__version__ = "0.0.0-repro-stub"
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class HealthCheck:
+    """No-op placeholder mirroring hypothesis.HealthCheck members."""
+
+    all = classmethod(lambda cls: [])
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+def settings(**kwargs) -> Callable:
+    """Decorator recording run settings (max_examples, deadline, ...)."""
+
+    def deco(fn):
+        merged = dict(getattr(fn, "_stub_settings", {}))
+        merged.update(kwargs)
+        fn._stub_settings = merged
+        return fn
+
+    return deco
+
+
+def example(*args, **kwargs) -> Callable:
+    """Pin an explicit example (run before the random ones)."""
+
+    def deco(fn):
+        fn._stub_examples = getattr(fn, "_stub_examples", []) + [(args, kwargs)]
+        return fn
+
+    return deco
+
+
+def given(*given_args, **given_kwargs) -> Callable:
+    """Run the wrapped test over sampled strategy draws.
+
+    Mirrors hypothesis' keyword usage: ``@given(x=st.integers(0, 5))``.
+    Positional strategies are matched against the test signature in order.
+    """
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = [n for n in sig.parameters if n != "self"]
+        kw = dict(given_kwargs)
+        for name, strat in zip(names, given_args):
+            kw.setdefault(name, strat)
+
+        @functools.wraps(fn)
+        def wrapper(*call_args, **call_kwargs):
+            cfg: Dict[str, Any] = getattr(wrapper, "_stub_settings", {})
+            n_examples = int(cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(f"repro-stub:{fn.__module__}.{fn.__qualname__}")
+            for eargs, ekwargs in getattr(wrapper, "_stub_examples", []):
+                fn(*call_args, *eargs, **call_kwargs, **ekwargs)
+            boundary = _boundary_draws(kw)
+            for i in range(n_examples):
+                if i < len(boundary):
+                    draw = boundary[i]
+                else:
+                    draw = {name: strat.sample(rng) for name, strat in kw.items()}
+                fn(*call_args, **call_kwargs, **draw)
+
+        # Hide the strategy-filled parameters from pytest's fixture
+        # resolution (real hypothesis rewrites the signature the same way).
+        remaining = [p for n, p in sig.parameters.items() if n not in kw]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def _boundary_draws(kw: Dict[str, "strategies.SearchStrategy"]):
+    """First draws: per-strategy boundary values, combined positionally."""
+    per_name = {n: s.boundary() for n, s in kw.items()}
+    width = max((len(v) for v in per_name.values()), default=0)
+    draws = []
+    for i in range(width):
+        rng = random.Random(f"repro-stub-boundary:{i}")
+        draws.append({
+            n: (vals[i] if i < len(vals) else kw[n].sample(rng))
+            for n, vals in per_name.items()
+        })
+    return draws

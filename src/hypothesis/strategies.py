@@ -1,0 +1,79 @@
+"""Strategy objects for the vendored hypothesis stub (see package docstring)."""
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, List, Sequence
+
+
+class SearchStrategy:
+    """A sampleable value source: `sample(rng)` draws one value."""
+
+    def __init__(self, sample: Callable[[random.Random], Any],
+                 boundary: Sequence[Any] = ()):
+        self._sample = sample
+        self._boundary = list(boundary)
+
+    def sample(self, rng: random.Random) -> Any:
+        return self._sample(rng)
+
+    def boundary(self) -> List[Any]:
+        return list(self._boundary)
+
+    def map(self, fn: Callable) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._sample(rng)),
+                              [fn(b) for b in self._boundary])
+
+    def filter(self, pred: Callable) -> "SearchStrategy":
+        def draw(rng):
+            for _ in range(1000):
+                v = self._sample(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate rejected 1000 draws")
+
+        return SearchStrategy(draw, [b for b in self._boundary if pred(b)])
+
+
+def integers(min_value: int = -(2**31), max_value: int = 2**31 - 1):
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value),
+                          [min_value, max_value])
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_ignored):
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value),
+                          [min_value, max_value])
+
+
+def booleans():
+    return SearchStrategy(lambda rng: bool(rng.getrandbits(1)), [False, True])
+
+
+def sampled_from(elements: Sequence):
+    elements = list(elements)
+    return SearchStrategy(lambda rng: rng.choice(elements),
+                          [elements[0], elements[-1]])
+
+
+def lists(elements: SearchStrategy, min_size: int = 0, max_size: int = 10):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.sample(rng) for _ in range(n)]
+
+    rng0 = random.Random("repro-stub-lists")
+    return SearchStrategy(
+        draw, [[elements.sample(rng0) for _ in range(max(min_size, 1))]])
+
+
+def just(value):
+    return SearchStrategy(lambda rng: value, [value])
+
+
+def one_of(*strategies: SearchStrategy):
+    return SearchStrategy(lambda rng: rng.choice(strategies).sample(rng),
+                          [s.boundary()[0] for s in strategies if s.boundary()])
+
+
+def tuples(*strategies: SearchStrategy):
+    return SearchStrategy(
+        lambda rng: tuple(s.sample(rng) for s in strategies),
+        [tuple(s.boundary()[0] if s.boundary() else None for s in strategies)])

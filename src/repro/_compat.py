@@ -1,0 +1,97 @@
+"""Version compatibility layer for the jax API surface this repo targets.
+
+The codebase (and the multi-device test payloads) are written against the
+jax >= 0.6 spellings — ``jax.shard_map``, ``jax.sharding.AxisType``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.lax.axis_size`` and the
+``check_vma=`` keyword.  Older jaxlibs (this container ships 0.4.x) expose
+the same functionality under the pre-stabilisation names
+(``jax.experimental.shard_map``, ``check_rep=``, no axis types).  Importing
+:mod:`repro` installs forward-compatible aliases for whichever of these are
+missing, so the one modern spelling works everywhere.  On a modern jax this
+module is a no-op.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    @functools.wraps(_legacy_shard_map)
+    def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=None,
+                  check_rep=None, **kwargs):
+        if check_rep is None:
+            # modern `check_vma` maps onto the old `check_rep` machinery
+            check_rep = bool(check_vma) if check_vma is not None else False
+        bound = functools.partial(
+            _legacy_shard_map, mesh=mesh, in_specs=in_specs,
+            out_specs=out_specs, check_rep=check_rep, **kwargs)
+        return bound if f is None else bound(f)
+
+    jax.shard_map = shard_map
+
+
+def _install_axis_type() -> None:
+    import jax.sharding as _sharding
+
+    if hasattr(_sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        """Stand-in for jax.sharding.AxisType (jax >= 0.6)."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    _sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    import inspect
+
+    if getattr(jax.make_mesh, "_repro_compat", False):
+        return
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):  # pragma: no cover
+        return
+    if "axis_types" in params:
+        return
+    _legacy_make_mesh = jax.make_mesh
+
+    @functools.wraps(_legacy_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        del axis_types  # pre-0.6 meshes have no axis-type concept
+        return _legacy_make_mesh(axis_shapes, axis_names, devices=devices)
+
+    make_mesh._repro_compat = True
+    jax.make_mesh = make_mesh
+
+
+def _install_axis_size() -> None:
+    if hasattr(jax.lax, "axis_size"):
+        return
+    from jax._src import core as _core
+
+    def axis_size(axis_name) -> int:
+        """Static size of a named mesh axis (inside shard_map)."""
+        return int(_core.axis_frame(axis_name))
+
+    jax.lax.axis_size = axis_size
+
+
+def install() -> None:
+    _install_shard_map()
+    _install_axis_type()
+    _install_make_mesh()
+    _install_axis_size()
+
+
+install()

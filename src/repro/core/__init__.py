@@ -1,5 +1,18 @@
-"""Core library: the paper's contribution (Chebyshev graph multipliers)."""
-from . import arma, chebyshev, distributed, filters, graph, jacobi, lasso, ssl, wavelets
+"""Core library: the paper's contribution (Chebyshev graph multipliers).
+
+`repro.core.distributed` is a deprecated shim over repro.dist.backends and
+is intentionally not imported eagerly (importing it emits the deprecation
+warning); `from repro.core import distributed` still works.
+"""
+from . import arma, chebyshev, filters, graph, jacobi, lasso, ssl, wavelets
+
+
+def __getattr__(name):  # PEP 562: keep `repro.core.distributed` working
+    if name == "distributed":
+        import importlib
+
+        return importlib.import_module(".distributed", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 from .chebyshev import (
     cheb_apply,
     cheb_apply_adjoint,

@@ -1,314 +1,52 @@
-"""Sharded (multi-device) Algorithm 1/2/3 via shard_map.
+"""DEPRECATED shim — the sharded Algorithm 1/2/3 implementations moved to
+:mod:`repro.dist.backends` (halo / allgather) behind the GraphOperator
+backend registry.
 
-TPU adaptation of the paper's distributed model (DESIGN.md §3): one device
-holds a contiguous *block* of vertices instead of one sensor holding one
-vertex. The per-order neighbour message exchange of Algorithm 1 lines 6-7
-becomes either
+Prefer the unified API:
 
-  * 'halo'      — ring collective_permute of boundary blocks (spatially
-                  sorted sensor graphs are banded, so inter-shard coupling
-                  touches only adjacent shards), or
-  * 'allgather' — an all_gather of the sharded iterate (general graphs).
+    op = repro.dist.GraphOperator(P, multipliers, lmax=lmax, K=K)
+    plan = op.plan(backend="halo", mesh=mesh)       # or "allgather"
+    plan.apply(f) / plan.apply_adjoint(a) / plan.solve_lasso(y, mu)
 
-The whole Chebyshev recurrence (and the whole ISTA loop for the lasso) runs
-*inside* one shard_map: per Chebyshev order exactly one collective fires,
-matching the paper's 2K|E| message accounting.
+The old free functions keep working from here (same signatures, including
+the caller-side padding contract) but new code should go through `plan()`.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Callable, Optional, Tuple, Union
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from ..dist.backends.allgather import (  # noqa: F401
+    _allgather_matvec,
+    dist_cheb_apply_allgather,
+)
+from ..dist.backends.halo import (  # noqa: F401
+    BandedPartition,
+    _halo_matvec,
+    dist_cheb_apply,
+    dist_cheb_apply_adjoint,
+    dist_cheb_apply_gram,
+    dist_lasso,
+    halo_bytes_per_apply,
+    pad_signal,
+    partition_banded,
+    shard_map,
+)
 
-from . import chebyshev as cheb
-from .lasso import soft_threshold
+__all__ = [
+    "BandedPartition",
+    "dist_cheb_apply",
+    "dist_cheb_apply_adjoint",
+    "dist_cheb_apply_allgather",
+    "dist_cheb_apply_gram",
+    "dist_lasso",
+    "halo_bytes_per_apply",
+    "pad_signal",
+    "partition_banded",
+]
 
-if hasattr(jax, "shard_map"):  # jax >= 0.6
-    shard_map = jax.shard_map
-else:  # pragma: no cover - older jax
-    from jax.experimental.shard_map import shard_map  # type: ignore
-
-Array = jax.Array
-
-
-# ---------------------------------------------------------------------------
-# Banded partition of P
-# ---------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
-class BandedPartition:
-    """P split into per-shard tridiagonal block structure.
-
-    diag:  (S, nl, nl)  coupling within shard i
-    left:  (S, nl, nl)  coupling of shard i's rows to shard i-1's columns
-    right: (S, nl, nl)  coupling of shard i's rows to shard i+1's columns
-    n:     logical size (before padding); S * nl >= n
-    """
-
-    diag: Array
-    left: Array
-    right: Array
-    n: int
-
-    @property
-    def n_shards(self) -> int:
-        return self.diag.shape[0]
-
-    @property
-    def n_local(self) -> int:
-        return self.diag.shape[1]
-
-
-def partition_banded(
-    P_dense: np.ndarray, n_shards: int
-) -> Tuple[BandedPartition, float]:
-    """Split P into block-tridiagonal shard structure.
-
-    Returns (partition, leak) where `leak` is the Frobenius norm of entries
-    outside the block tridiagonal band (must be ~0 for the halo mode to be
-    exact — use `spatial_sort` first for sensor graphs, or 'allgather' mode).
-    """
-    P_dense = np.asarray(P_dense)
-    n = P_dense.shape[0]
-    nl = -(-n // n_shards)
-    pad = n_shards * nl - n
-    Pp = np.pad(P_dense, ((0, pad), (0, pad)))
-    diag = np.zeros((n_shards, nl, nl), P_dense.dtype)
-    left = np.zeros((n_shards, nl, nl), P_dense.dtype)
-    right = np.zeros((n_shards, nl, nl), P_dense.dtype)
-    covered = np.zeros_like(Pp, dtype=bool)
-    for s in range(n_shards):
-        r = slice(s * nl, (s + 1) * nl)
-        diag[s] = Pp[r, r]
-        covered[r, r] = True
-        if s > 0:
-            c = slice((s - 1) * nl, s * nl)
-            left[s] = Pp[r, c]
-            covered[r, c] = True
-        if s < n_shards - 1:
-            c = slice((s + 1) * nl, (s + 2) * nl)
-            right[s] = Pp[r, c]
-            covered[r, c] = True
-    leak = float(np.linalg.norm(Pp[~covered]))
-    return (
-        BandedPartition(
-            diag=jnp.asarray(diag),
-            left=jnp.asarray(left),
-            right=jnp.asarray(right),
-            n=n,
-        ),
-        leak,
-    )
-
-
-def pad_signal(x: np.ndarray | Array, parts: BandedPartition) -> Array:
-    total = parts.n_shards * parts.n_local
-    x = jnp.asarray(x)
-    pad = [(0, total - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
-    return jnp.pad(x, pad)
-
-
-# ---------------------------------------------------------------------------
-# Local matvecs (run inside shard_map)
-# ---------------------------------------------------------------------------
-def _halo_matvec(diag, left, right, axis: str):
-    """Matvec along the *last* axis of x with one ring halo exchange.
-
-    x: (..., nl) local block. The permute indices form a ring; the first/last
-    shard's out-of-range contribution is killed by the zero left/right blocks
-    (partition_banded leaves left[0] = right[-1] = 0).
-    """
-    size = jax.lax.axis_size(axis)
-
-    def mv(x: Array) -> Array:
-        if size > 1:
-            # lines 6-7 of Algorithm 1: exchange boundary state with neighbours
-            from_right = jax.lax.ppermute(
-                x, axis, perm=[(i, (i - 1) % size) for i in range(size)]
-            )
-            from_left = jax.lax.ppermute(
-                x, axis, perm=[(i, (i + 1) % size) for i in range(size)]
-            )
-        else:
-            from_right = x
-            from_left = x
-        y = jnp.einsum("ij,...j->...i", diag, x)
-        y = y + jnp.einsum("ij,...j->...i", left, from_left)
-        y = y + jnp.einsum("ij,...j->...i", right, from_right)
-        return y
-
-    return mv
-
-
-def _allgather_matvec(rows, axis: str):
-    """rows: (nl, N_padded) local row block; x gathered each application."""
-
-    def mv(x: Array) -> Array:
-        x_full = jax.lax.all_gather(x, axis, axis=x.ndim - 1, tiled=True)
-        return jnp.einsum("ij,...j->...i", rows, x_full)
-
-    return mv
-
-# ---------------------------------------------------------------------------
-# Public sharded applications
-# ---------------------------------------------------------------------------
-def dist_cheb_apply(
-    mesh: Mesh,
-    parts: BandedPartition,
-    x: Array,
-    coeffs: Union[Array, np.ndarray],
-    lmax: float,
-    axis: str = "graph",
-) -> Array:
-    """Sharded Phi_tilde x (Algorithm 1). x: (n_padded,). Returns
-    (eta, n_padded) (or (n_padded,) for 1-D coeffs)."""
-    single = np.asarray(coeffs).ndim == 1
-    c = jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype))
-
-    @partial(
-        shard_map,
-        mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P()),
-        out_specs=P(None, axis),
-        check_vma=False,
-    )
-    def run(diag, left, right, xl, c):
-        mv = _halo_matvec(diag[0], left[0], right[0], axis)
-        return cheb.cheb_apply(mv, xl, c, lmax)
-
-    out = run(parts.diag, parts.left, parts.right, x, c)
-    return out[0] if single else out
-
-
-def _sharded(fn, mesh, in_specs, out_specs):
-    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                     check_vma=False)
-
-
-def dist_cheb_apply_adjoint(
-    mesh: Mesh,
-    parts: BandedPartition,
-    a: Array,
-    coeffs: Union[Array, np.ndarray],
-    lmax: float,
-    axis: str = "graph",
-) -> Array:
-    """Sharded Phi_tilde^* a (Algorithm 2). a: (eta, n_padded)."""
-    c = jnp.asarray(coeffs, dtype=a.dtype)
-
-    def run(diag, left, right, al, c):
-        mv = _halo_matvec(diag[0], left[0], right[0], axis)
-        return cheb.cheb_apply_adjoint(mv, al, c, lmax, matvec_batched=mv)
-
-    return _sharded(
-        run, mesh,
-        (P(axis), P(axis), P(axis), P(None, axis), P()),
-        P(axis),
-    )(parts.diag, parts.left, parts.right, a, c)
-
-
-def dist_cheb_apply_gram(
-    mesh: Mesh,
-    parts: BandedPartition,
-    x: Array,
-    coeffs: np.ndarray,
-    lmax: float,
-    axis: str = "graph",
-) -> Array:
-    """Sharded Phi~*Phi~ x via product coefficients (Section IV-C)."""
-    d = jnp.asarray(cheb.gram_coeffs(coeffs), dtype=x.dtype)
-
-    def run(diag, left, right, xl, d):
-        mv = _halo_matvec(diag[0], left[0], right[0], axis)
-        return cheb.cheb_apply(mv, xl, d, lmax)
-
-    return _sharded(
-        run, mesh,
-        (P(axis), P(axis), P(axis), P(axis), P()),
-        P(axis),
-    )(parts.diag, parts.left, parts.right, x, d)
-
-
-def dist_lasso(
-    mesh: Mesh,
-    parts: BandedPartition,
-    y: Array,
-    coeffs: np.ndarray,
-    lmax: float,
-    mu: Array,
-    gamma: float = 0.2,
-    n_iters: int = 300,
-    axis: str = "graph",
-) -> Tuple[Array, Array]:
-    """Fully sharded Algorithm 3 (distributed lasso).
-
-    y: (n_padded,); mu: (eta,) per-scale weights. Returns (a_*, y_*) with
-    a_*: (eta, n_padded) wavelet coefficients, y_*: (n_padded,) denoised
-    signal. The entire ISTA loop lives inside one shard_map — per soft-
-    thresholding iteration, the only communication is the 4K halo exchanges
-    of Phi~ Phi~* (Section VI's communication analysis).
-    """
-    c = jnp.asarray(coeffs, dtype=y.dtype)
-    mu_arr = jnp.asarray(mu, dtype=y.dtype)
-
-    def run(diag, left, right, yl, c, mu_arr):
-        mv = _halo_matvec(diag[0], left[0], right[0], axis)
-        phi_y = cheb.cheb_apply(mv, yl, c, lmax)  # Alg. 3 line 3
-        thresh = mu_arr[:, None] * gamma
-
-        def body(a, _):
-            gram_a = cheb.cheb_apply(
-                mv, cheb.cheb_apply_adjoint(mv, a, c, lmax, matvec_batched=mv),
-                c, lmax,
-            )
-            a_new = soft_threshold(a + gamma * (phi_y - gram_a), thresh)
-            return a_new, None
-
-        a0 = jnp.zeros_like(phi_y)
-        a_star, _ = jax.lax.scan(body, a0, None, length=n_iters)
-        y_star = cheb.cheb_apply_adjoint(mv, a_star, c, lmax, matvec_batched=mv)
-        return a_star, y_star
-
-    return _sharded(
-        run, mesh,
-        (P(axis), P(axis), P(axis), P(axis), P(), P()),
-        (P(None, axis), P(axis)),
-    )(parts.diag, parts.left, parts.right, y, c, mu_arr)
-
-
-# ---------------------------------------------------------------------------
-# All-gather fallback for non-banded graphs
-# ---------------------------------------------------------------------------
-def dist_cheb_apply_allgather(
-    mesh: Mesh,
-    P_dense: Array,
-    x: Array,
-    coeffs: Union[Array, np.ndarray],
-    lmax: float,
-    axis: str = "graph",
-) -> Array:
-    """Sharded Phi_tilde x for general (non-banded) P: row-block sharding of
-    P, one all_gather of the iterate per Chebyshev order."""
-    single = np.asarray(coeffs).ndim == 1
-    c = jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype))
-
-    def run(rows, xl, c):
-        mv = _allgather_matvec(rows, axis)
-        return cheb.cheb_apply(mv, xl, c, lmax)
-
-    out = _sharded(
-        run, mesh, (P(axis, None), P(axis), P()), P(None, axis)
-    )(P_dense, x, c)
-    return out[0] if single else out
-
-
-def halo_bytes_per_apply(parts: BandedPartition, K: int, eta: int = 1,
-                         dtype_bytes: int = 4) -> int:
-    """Collective-traffic model for one sharded application: per Chebyshev
-    order each shard sends its block left+right (2 * nl * eta * bytes), K
-    rounds, n_shards shards. The TPU analog of the paper's 2K|E| messages."""
-    return 2 * K * parts.n_shards * parts.n_local * eta * dtype_bytes
+warnings.warn(
+    "repro.core.distributed is deprecated; use repro.dist "
+    "(GraphOperator.plan(backend='halo'|'allgather', mesh=...))",
+    DeprecationWarning,
+    stacklevel=2,
+)

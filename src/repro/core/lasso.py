@@ -50,15 +50,31 @@ def distributed_lasso(
     a0: Optional[Array] = None,
     record_objective: bool = False,
     soft_threshold_fn: Callable = soft_threshold,
+    backend: Optional[str] = None,
+    mesh=None,
 ) -> LassoResult:
     """Algorithm 3. `mu` may be a scalar, an (eta,)-vector (per-scale weights,
     as in the paper: 0.01 for scaling coefficients, 0.75 for wavelets), or a
     full (eta, N) array.
 
+    `op` may be a UnionMultiplier/GraphOperator or an already-built
+    ExecutionPlan; passing `backend=` (plus `mesh=` for sharded backends)
+    plans the operator here — `backend="halo"` runs the whole ISTA loop
+    inside one shard_map (repro.dist.backends.halo.dist_lasso).
+
     The whole ISTA loop is a single lax.scan whose body applies
     Phi~ Phi~* (2*K matvecs via Algorithms 2+1) plus local shrinkage — the
     same structure a real sensor network would execute.
     """
+    if backend is not None:
+        plan = op.plan(backend, mesh=mesh)
+        # the fused (in-shard_map) path supports none of the loop knobs —
+        # fall through to the generic ISTA over the plan if any is set
+        if (plan.solve_lasso_fn is not None and a0 is None
+                and not record_objective
+                and soft_threshold_fn is soft_threshold):
+            return plan.solve_lasso(y, mu, gamma=gamma, n_iters=n_iters)
+        op = plan
     eta = op.eta
     mu_arr = jnp.asarray(mu, dtype=y.dtype)
     if mu_arr.ndim == 0:

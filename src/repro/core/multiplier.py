@@ -116,6 +116,22 @@ class UnionMultiplier:
         """Prop. 4: ||Phi - Phi_tilde||_2 <= B(K) sqrt(eta)."""
         return self.B() * float(np.sqrt(self.eta))
 
+    # -- Execution planning (see repro.dist.operator) -------------------------
+    def plan(self, backend: str = "dense", *, mesh=None, partition=None,
+             **options):
+        """Bind an execution strategy from the repro.dist backend registry.
+
+        Returns an ExecutionPlan with uniform `apply / apply_adjoint /
+        apply_gram / solve_lasso`.  `backend` is one of
+        `repro.dist.available_backends()` (dense | pallas | halo | allgather
+        built in); sharded backends take `mesh=` (and optionally a
+        precomputed `partition=`).
+        """
+        from ..dist.backends import get_backend
+
+        return get_backend(backend)(self, mesh=mesh, partition=partition,
+                                    **options)
+
     # -- Communication model (Section IV-B/C) ---------------------------------
     def message_counts(self, n_edges: int) -> dict:
         """The paper's communication accounting for one application."""

@@ -16,7 +16,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import filters
-from .multiplier import graph_multiplier, ScalarMultiplier
 
 Array = jax.Array
 
@@ -42,22 +41,34 @@ def semi_supervised_classify(
     tau: float = 1.0,
     lmax: Optional[float] = None,
     K: int = 20,
+    backend: str = "dense",
+    mesh=None,
 ) -> SSLResult:
     """Steps 1-4 of Section III-D.
 
     P: PSD matrix with the graph's sparsity pattern (L, L_norm, or K-scaling).
     h: RKHS kernel spectral function (default: identity, i.e. S = P).
+    backend/mesh: execution strategy for the multiplier application (any
+    registered repro.dist backend; "dense" is the single-device default).
     """
+    from ..dist.operator import GraphOperator
+
     if lmax is None:
         lam = jnp.linalg.eigvalsh(P)
         lmax = float(lam[-1]) * 1.01
     h = h or filters.power_kernel(1)
     g = filters.ssl_multiplier(h, tau)
-    R: ScalarMultiplier = graph_multiplier(P, g, lmax=lmax, K=K)
+    R = GraphOperator(P=P, multipliers=[g], lmax=lmax, K=K)
     Y = label_matrix(labels, labeled_mask, n_classes)  # (N, kappa)
     # One union application on the matrix signal: the Chebyshev recurrence
-    # (Algorithm 1) runs once with length-kappa messages.
-    F = R.apply(Y)
+    # (Algorithm 1) runs once with length-kappa messages.  Non-dense
+    # backends take 1-D signals only, so they classify column-by-column.
+    plan = R.plan(backend, mesh=mesh)
+    if backend == "dense":
+        F = plan.apply(Y)[0]
+    else:
+        F = jnp.stack([plan.apply(Y[:, j])[0] for j in range(n_classes)],
+                      axis=1)
     return SSLResult(scores=F, predictions=jnp.argmax(F, axis=1))
 
 

@@ -12,8 +12,6 @@ from typing import Callable, List, Sequence, Union
 
 import numpy as np
 
-from .multiplier import UnionMultiplier
-
 
 def wavelet_kernel(
     alpha: float = 2.0, beta: float = 2.0, x1: float = 1.0, x2: float = 2.0
@@ -87,11 +85,16 @@ def sgwt_multipliers(
     return mults
 
 
-def sgwt_operator(
-    P, lmax: float, J: int = 6, K: int = 20, lpfactor: float = 20.0
-) -> UnionMultiplier:
-    """The Chebyshev-approximate spectral graph wavelet frame Phi_tilde."""
-    return UnionMultiplier(
+def sgwt_operator(P, lmax: float, J: int = 6, K: int = 20,
+                  lpfactor: float = 20.0):
+    """The Chebyshev-approximate spectral graph wavelet frame Phi_tilde.
+
+    Returns a :class:`repro.dist.GraphOperator` — a UnionMultiplier whose
+    execution strategy is bound later via ``.plan(backend=..., mesh=...)``.
+    """
+    from ..dist.operator import GraphOperator
+
+    return GraphOperator(
         P=P, multipliers=sgwt_multipliers(lmax, J, lpfactor), lmax=lmax, K=K
     )
 

@@ -1,0 +1,27 @@
+"""repro.dist — distributed execution layer.
+
+* :mod:`repro.dist.operator`  — `GraphOperator` / `ExecutionPlan`, the
+  unified apply surface (plan/execute split).
+* :mod:`repro.dist.backends`  — pluggable execution strategies
+  (dense | pallas | halo | allgather) behind a registry.
+* :mod:`repro.dist.sharding`  — logical-axis `ShardingRules` / `make_rules`.
+* :mod:`repro.dist.gossip`    — Chebyshev ring consensus (the paper's
+  Algorithm 1 on the device ring) for fabric-free gradient averaging.
+"""
+from . import gossip, sharding
+from .backends import available_backends, get_backend, register_backend
+from .operator import ExecutionPlan, GraphOperator, as_graph_operator
+from .sharding import ShardingRules, make_rules
+
+__all__ = [
+    "ExecutionPlan",
+    "GraphOperator",
+    "ShardingRules",
+    "as_graph_operator",
+    "available_backends",
+    "get_backend",
+    "gossip",
+    "make_rules",
+    "register_backend",
+    "sharding",
+]

@@ -1,0 +1,42 @@
+"""'dense' execution backend: Algorithm 1/2 against P as given.
+
+P may be a dense matrix or a matvec closure; this is the single-device
+reference path (what `UnionMultiplier.apply` always did) wrapped in the
+uniform ExecutionPlan signature.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core import chebyshev as cheb
+from . import register_backend
+
+Array = jax.Array
+
+
+@register_backend("dense")
+def build(op, *, mesh=None, partition=None, **options):
+    from ..operator import ExecutionPlan
+
+    del mesh, partition  # single-device backend
+    mv = op.matvec
+    coeffs = op.coeffs
+    lmax = op.lmax
+
+    def apply(f: Array) -> Array:
+        c2 = jnp.atleast_2d(jnp.asarray(coeffs, f.dtype))
+        return cheb.cheb_apply(mv, f, c2, lmax)
+
+    def apply_adjoint(a: Array) -> Array:
+        return cheb.cheb_apply_adjoint(mv, a, jnp.asarray(coeffs, a.dtype),
+                                       lmax)
+
+    def apply_gram(f: Array) -> Array:
+        return cheb.cheb_apply_gram(mv, f, coeffs, lmax)
+
+    return ExecutionPlan(
+        op=op, backend="dense",
+        apply=apply, apply_adjoint=apply_adjoint, apply_gram=apply_gram,
+        info={"matvecs_per_apply": op.K},
+    )

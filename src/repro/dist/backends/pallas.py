@@ -1,0 +1,80 @@
+"""'pallas' execution backend: Block-ELL SpMV + fused Chebyshev-step kernels.
+
+Converts the dense P once into the Block-ELL layout at plan time, then every
+application runs the fused recurrence (`kernels.ops.fused_cheb_apply`) — the
+hot path on TPU, interpret mode on CPU.  Signals are padded to the Block-ELL
+padded size internally and the padding is stripped from every output, so
+callers see the logical N everywhere.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import chebyshev as cheb
+from ...core import graph as graphmod
+from ...kernels import ops
+from . import register_backend
+
+Array = jax.Array
+
+
+@register_backend("pallas")
+def build(op, *, mesh=None, partition=None, block: Tuple[int, int] = (8, 128),
+          use_pallas: Optional[bool] = True, **options):
+    from ..operator import ExecutionPlan
+
+    del mesh, partition  # single-device backend
+    if callable(op.P):
+        raise ValueError("pallas backend needs a dense P to build Block-ELL")
+    L = np.asarray(op.P, dtype=np.float32)
+    A = graphmod.to_block_ell(L, block)
+    n = L.shape[0]
+    total = A.padded_n
+    coeffs = op.coeffs
+    lmax = op.lmax
+
+    def _pad(x: Array) -> Array:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, total - x.shape[-1])]
+        return jnp.pad(x, widths)
+
+    def _mv(t: Array) -> Array:
+        return ops.spmv(A, t, use_pallas=use_pallas)
+
+    def _mv_batched(t: Array) -> Array:
+        return jax.vmap(_mv)(t)
+
+    def apply(f: Array) -> Array:
+        c2 = np.atleast_2d(np.asarray(coeffs))
+        out = ops.fused_cheb_apply(A, _pad(f), c2, lmax,
+                                   use_pallas=use_pallas)
+        return out[:, :n]
+
+    def apply_adjoint(a: Array) -> Array:
+        out = cheb.cheb_apply_adjoint(_mv, _pad(a),
+                                      jnp.asarray(coeffs, a.dtype), lmax,
+                                      matvec_batched=_mv_batched)
+        return out[:n]
+
+    def apply_gram(f: Array) -> Array:
+        d = cheb.gram_coeffs(coeffs)
+        out = ops.fused_cheb_apply(A, _pad(f), d[None], lmax,
+                                   use_pallas=use_pallas)
+        return out[0, :n]
+
+    nnz_blocks = int(np.asarray(A.mask).sum()) if hasattr(A, "mask") else None
+    return ExecutionPlan(
+        op=op, backend="pallas",
+        apply=apply, apply_adjoint=apply_adjoint, apply_gram=apply_gram,
+        info={
+            "block": block,
+            "padded_n": total,
+            "nnz_blocks": nnz_blocks,
+            "flops_per_matvec": (
+                None if nnz_blocks is None
+                else nnz_blocks * 2 * block[0] * block[1]),
+        },
+    )

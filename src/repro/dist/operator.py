@@ -1,0 +1,122 @@
+"""The unified execution API: `GraphOperator` + `ExecutionPlan`.
+
+One object owns the paper's math (coefficients of Eq. (14), error bound of
+Prop. 4, message accounting of Section IV) and an explicit *plan* step picks
+the execution strategy:
+
+    op = GraphOperator(P, multipliers, lmax=lmax, K=20)
+    plan = op.plan(backend="halo", mesh=mesh)     # or dense | pallas | allgather
+    out  = plan.apply(f)            # Phi~ f          (eta, N)
+    sig  = plan.apply_adjoint(out)  # Phi~* a         (N,)
+    gr   = plan.apply_gram(f)       # Phi~* Phi~ f    (N,)
+    res  = plan.solve_lasso(y, mu)  # Algorithm 3
+
+Every backend honours the same signatures and the same logical sizes —
+padding (Block-ELL tiles, shard grids) is a backend detail, applied on the
+way in and stripped on the way out.  New strategies register through
+:mod:`repro.dist.backends` without touching any caller.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from ..core.multiplier import UnionMultiplier
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """A compiled-strategy view of one GraphOperator.
+
+    `apply` / `apply_adjoint` / `apply_gram` are jit-compatible closures with
+    the uniform signatures documented on :class:`GraphOperator`.  `info`
+    carries backend-specific cost metadata (halo bytes, Block-ELL occupancy,
+    ...) for benchmarks and dashboards.
+    """
+
+    op: UnionMultiplier
+    backend: str
+    apply: Callable[[Array], Array]
+    apply_adjoint: Callable[[Array], Array]
+    apply_gram: Callable[[Array], Array]
+    info: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    solve_lasso_fn: Optional[Callable] = None
+
+    # mirrored operator metadata -------------------------------------------
+    @property
+    def eta(self) -> int:
+        return self.op.eta
+
+    @property
+    def K(self) -> int:
+        return self.op.K
+
+    @property
+    def lmax(self) -> float:
+        return self.op.lmax
+
+    @property
+    def coeffs(self):
+        return self.op.coeffs
+
+    def error_bound(self) -> float:
+        return self.op.error_bound()
+
+    def message_counts(self, n_edges: int) -> dict:
+        return self.op.message_counts(n_edges)
+
+    # Algorithm 3 -----------------------------------------------------------
+    def solve_lasso(self, y: Array, mu, gamma: Optional[float] = None,
+                    n_iters: int = 300, **kwargs):
+        """Distributed wavelet lasso (Section VI) under this plan's backend.
+
+        Backends that can fuse the whole ISTA loop (halo: one shard_map)
+        override the generic path.  The fused path takes no extra loop
+        knobs, so any kwargs (a0, record_objective, soft_threshold_fn, ...)
+        route to the generic ISTA over this plan's apply/apply_adjoint
+        instead of being dropped.
+        """
+        from ..core import lasso as _lasso
+
+        if gamma is None:
+            gamma = _lasso.ista_step_size(self.op)
+        if self.solve_lasso_fn is not None and not kwargs:
+            return self.solve_lasso_fn(y, mu, gamma, n_iters)
+        return _lasso.distributed_lasso(self, y, mu=mu, gamma=gamma,
+                                        n_iters=n_iters, **kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphOperator(UnionMultiplier):
+    """Union of graph multiplier operators with pluggable execution.
+
+    Construction computes the truncated shifted-Chebyshev coefficients once
+    (Eq. (14)); `.plan(backend=...)` binds an execution strategy.  Uniform
+    plan signatures across all backends:
+
+        plan.apply(f)          f: (N,)      ->  (eta, N)
+        plan.apply_adjoint(a)  a: (eta, N)  ->  (N,)
+        plan.apply_gram(f)     f: (N,)      ->  (N,)
+        plan.solve_lasso(y, mu, ...)        ->  LassoResult
+
+    GraphOperator also keeps every UnionMultiplier method (`apply`,
+    `exact_apply`, `error_bound`, ...), so it is a drop-in replacement —
+    `op.apply(f)` is simply shorthand for `op.plan("dense").apply(f)`.
+    """
+
+    # `plan` is inherited from UnionMultiplier (defined there so legacy
+    # UnionMultiplier instances route through the same registry); the
+    # subclass exists to give the unified API its own name + docs and to
+    # host future plan-level caching without touching the math core.
+
+
+def as_graph_operator(op: UnionMultiplier) -> GraphOperator:
+    """Re-wrap any UnionMultiplier as a GraphOperator (shares P, no copy)."""
+    if isinstance(op, GraphOperator):
+        return op
+    return GraphOperator(P=op.P, multipliers=op.multipliers, lmax=op.lmax,
+                         K=op.K, coeff_points=op.coeff_points)

@@ -23,7 +23,12 @@ _BLOCK = 1024
 
 
 def pick_block(n: int, maximum: int = _BLOCK) -> int:
-    """Largest 128-multiple block size <= maximum that divides n."""
+    """Largest 128-multiple block size <= maximum that divides n.
+
+    Callers with arbitrary n never see the ValueError: `cheb_step` pads its
+    iterates to a 128 multiple before tiling and strips the padding from the
+    outputs.
+    """
     for b in range(min(maximum, n), 127, -128):
         if n % b == 0 and b % 128 == 0:
             return b
@@ -54,9 +59,17 @@ def cheb_step(
 ):
     """Returns (t_k, acc + outer(coef, t_k)).
 
-    pt, t_km1, t_km2: (n,) with n a multiple of the 1024 tile.
-    acc: (eta, n); coef: (eta,).
+    pt, t_km1, t_km2: (n,) — any n; iterates are zero-padded to a multiple
+    of the 128 lane width for tiling and the padding is stripped from both
+    outputs.  acc: (eta, n); coef: (eta,).
     """
+    n_logical = pt.shape[0]
+    pad = (-n_logical) % 128
+    if pad:
+        pt = jnp.pad(pt, (0, pad))
+        t_km1 = jnp.pad(t_km1, (0, pad))
+        t_km2 = jnp.pad(t_km2, (0, pad))
+        acc = jnp.pad(acc, ((0, 0), (0, pad)))
     n = pt.shape[0]
     eta = acc.shape[0]
     blk = pick_block(n)
@@ -82,4 +95,7 @@ def cheb_step(
         ],
         interpret=interpret,
     )(coef[:, None], pt, t_km1, t_km2, acc)
+    if pad:
+        tk = tk[:n_logical]
+        acc_out = acc_out[:, :n_logical]
     return tk, acc_out

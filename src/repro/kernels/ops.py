@@ -51,8 +51,9 @@ def fused_cheb_apply(
 ) -> Array:
     """Phi_tilde x with the SpMV + fused-step kernels (Algorithm 1 on TPU).
 
-    x: (padded_n,) — padded_n must be a multiple of 1024 for the fused
-    elementwise kernel (use `pad_for_kernels`). Returns (eta, padded_n).
+    x: (padded_n,) matching A's Block-ELL padding; any padded_n works (the
+    fused step kernel pads its tiles to the 128 lane width internally).
+    Returns (eta, padded_n).
     """
     use, interp = _resolve(use_pallas)
     c = jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype))

@@ -39,6 +39,15 @@ from .mesh import make_production_mesh
 from .roofline import Roofline, collective_stats, model_flops
 
 
+def _cost_dict(compiled):
+    """compiled.cost_analysis() as a dict: jax >= 0.6 returns the dict
+    directly, older jax returns a one-element list of dicts."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _ns(mesh, spec_tree):
     """PartitionSpec tree -> NamedSharding tree (P is itself a pytree node,
     so guard with is_leaf)."""
@@ -145,7 +154,7 @@ def _layer_cost(cfg, rules, run, shape, mesh, encoder: bool = False) -> Dict:
     fitted = _fit(tuple(arg_shapes), tuple(arg_specs), mesh)
     jitted = jax.jit(f, in_shardings=_ns(mesh, fitted))
     compiled = jitted.lower(*arg_shapes).compile()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     coll = collective_stats(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -243,7 +252,7 @@ def run_cell(
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", 0.0))
     coll = collective_stats(compiled.as_text(), top_k=dump_collectives)
