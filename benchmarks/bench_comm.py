@@ -33,6 +33,12 @@ def sweep_backends(backends, json_dir=".", K=20, J=6):
         plan = make_backend_plan(op, backend)
         bytes_model = {k: v for k, v in plan.info.items()
                        if "bytes" in k or k in ("n_shards", "mesh_axis")}
+        # measured collective counts (vacuous on a 1-shard mesh, where the
+        # sharded backends skip their ppermutes — see bench_scaling for the
+        # forced-multi-device measurement)
+        from repro.dist import plan_comm_stats
+
+        measured = {k: s.summary() for k, s in plan_comm_stats(plan).items()}
         row(f"comm_plan_{backend}", 0.0,
             f"E={g.n_edges};apply_msgs={mc['apply_messages']};"
             + ";".join(f"{k}={v}" for k, v in bytes_model.items()))
@@ -46,6 +52,7 @@ def sweep_backends(backends, json_dir=".", K=20, J=6):
             "device_count": len(jax.devices()),
             "paper_message_counts": mc,
             "plan_info": dict(plan.info),
+            "measured_commstats": measured,
         })
 
 

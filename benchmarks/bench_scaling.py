@@ -1,0 +1,146 @@
+"""Communication-vs-network-size curve (paper Fig. 3 analogue).
+
+Measures — via :mod:`repro.dist.commstats`, i.e. by counting the collectives
+each compiled plan actually traces to — the messages per application of
+Phi~ / Phi~* / Phi~*Phi~ on sensor graphs of growing size, and compares
+them against the paper's closed forms (2K|E| / 2K|E| / 4K|E|, Section
+IV-B/C).  The acceptance gate is that the measured count stays within 10%
+of the prediction at every size; a faithful Algorithm 1 implementation
+lands on it exactly.
+
+Also reports the device-level byte curve of the sharded backends: the
+`pallas_halo` boundary-rows-only exchange vs the `halo` full-block exchange
+— the systems-level payoff of halo-aware tiling.
+
+    PYTHONPATH=src python -m benchmarks.bench_scaling [--json-dir DIR]
+        [--backend pallas_halo,halo] [--sizes 150,300,600] [--shards 8]
+
+Measurement needs >= 2 mesh shards (1-shard plans skip collectives); when
+the current process has a single device the module re-execs itself in a
+subprocess with forced host devices, so it works from `benchmarks.run`
+and standalone alike.
+"""
+import argparse
+import os
+import subprocess
+import sys
+
+DEFAULT_SIZES = (150, 300, 600)
+DEFAULT_BACKENDS = ("pallas_halo", "halo")
+DEFAULT_SHARDS = 8
+
+
+def _measure(backends, sizes, n_shards, json_dir, K=15, J=3):
+    import jax
+    import numpy as np
+
+    from repro.core import graph
+    from repro.core.wavelets import sgwt_multipliers
+    from repro.dist import GraphOperator, verify_message_scaling
+
+    from .common import row, write_json
+
+    mesh = jax.make_mesh((n_shards,), ("graph",))
+    key = jax.random.PRNGKey(0)
+    curve = []
+    for n in sizes:
+        # keep expected degree roughly constant across sizes
+        kappa = 0.075 * float(np.sqrt(500.0 / n))
+        g, key = graph.connected_sensor_graph(key, n=n, theta=kappa,
+                                              kappa=kappa)
+        gs, _ = graph.spatial_sort(g)
+        E = g.n_edges
+        lmax = gs.lambda_max_bound()
+        op = GraphOperator(P=gs.laplacian(),
+                           multipliers=sgwt_multipliers(lmax, J),
+                           lmax=lmax, K=K)
+        point = {"n": n, "E": E, "K": K, "eta": op.eta,
+                 "predicted": op.message_counts(E), "backends": {}}
+        for backend in backends:
+            plan = op.plan(backend, mesh=mesh, allow_leak=True)
+            v = verify_message_scaling(plan, E)
+            apply_stats = v["stats"]["apply"]
+            point["backends"][backend] = {
+                "measured": v["measured"],
+                "rel_dev": v["rel_dev"],
+                "bytes_per_apply": apply_stats["total_bytes"],
+                "rounds_per_apply": apply_stats["exchange_rounds"],
+                "plan_info": {k: val for k, val in plan.info.items()
+                              if isinstance(val, (int, float, str))},
+            }
+            row(f"scaling_{backend}_N{n}", 0.0,
+                f"E={E};measured_apply={v['measured']['apply']};"
+                f"predicted_apply={v['predicted']['apply']};"
+                f"max_rel_dev={v['max_rel_dev']:.3f};"
+                f"bytes_per_apply={apply_stats['total_bytes']}")
+            assert v["max_rel_dev"] <= 0.10, (
+                f"{backend} N={n}: measured messages deviate "
+                f">10% from 2K|E| ({v['rel_dev']})")
+        curve.append(point)
+
+    write_json(json_dir, "bench_scaling", {
+        "bench": "scaling",
+        "n_shards": n_shards,
+        "sizes": list(sizes),
+        "backends": list(backends),
+        "curve": curve,
+    })
+    return curve
+
+
+def run(backends=None, json_dir=".", sizes=None, n_shards=DEFAULT_SHARDS):
+    """Entry point used by `benchmarks.run`.
+
+    Spawns a forced-host-device subprocess when this process cannot build
+    an `n_shards`-wide mesh (collectives vanish on 1-shard meshes, so the
+    measurement would be vacuous).
+    """
+    backends = tuple(backends or DEFAULT_BACKENDS)
+    sizes = tuple(sizes or DEFAULT_SIZES)
+
+    import jax
+
+    if len(jax.devices()) >= n_shards:
+        return _measure(backends, sizes, n_shards, json_dir)
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_shards} "
+        + env.get("XLA_FLAGS", ""))
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env["PYTHONPATH"] = (src + os.pathsep + root + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    cmd = [sys.executable, "-m", "benchmarks.bench_scaling",
+           "--json-dir", json_dir, "--backend", ",".join(backends),
+           "--sizes", ",".join(str(s) for s in sizes),
+           "--shards", str(n_shards)]
+    proc = subprocess.run(cmd, env=env, cwd=root)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"bench_scaling subprocess failed (rc={proc.returncode})")
+    return None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-dir", default=".")
+    ap.add_argument("--backend", default=",".join(DEFAULT_BACKENDS))
+    ap.add_argument("--sizes", default=",".join(map(str, DEFAULT_SIZES)))
+    ap.add_argument("--shards", type=int, default=DEFAULT_SHARDS)
+    args = ap.parse_args()
+    backends = tuple(args.backend.split(","))
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+
+    import jax
+
+    if len(jax.devices()) >= args.shards:
+        print("name,us_per_call,derived")
+        _measure(backends, sizes, args.shards, args.json_dir)
+    else:
+        run(backends, args.json_dir, sizes, args.shards)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,16 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full]
-    PYTHONPATH=src python -m benchmarks.run --only kernels,comm \
-        --backend dense,pallas,halo,allgather [--json-dir bench-out]
+    PYTHONPATH=src python -m benchmarks.run --only kernels,comm,scaling \
+        --backend dense,pallas,halo,pallas_halo,allgather [--json-dir bench-out]
 
 Prints ``name,us_per_call,derived`` CSV rows.  --full uses paper-scale trial
 counts (slow on CPU); the default is a reduced but statistically meaningful
 configuration.  --backend sweeps bench_kernels/bench_comm through the
 `GraphOperator.plan()` API for each named backend and writes one comparable
-JSON file per backend to --json-dir.
+JSON file per backend to --json-dir.  The `scaling` benchmark
+(bench_scaling) measures messages-per-apply with repro.dist.commstats and
+checks them against the paper's 2K|E| closed form across graph sizes.
 """
 import argparse
 import sys
@@ -19,17 +21,18 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale trial counts")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: fig1,fig2,lasso,comm,kernels")
+                    help="comma-separated subset: "
+                    "fig1,fig2,lasso,comm,kernels,scaling")
     ap.add_argument("--backend", default=None,
                     help="comma-separated execution backends to sweep "
-                    "(dense,pallas,halo,allgather) through the plan API; "
-                    "one JSON per backend is written to --json-dir")
+                    "(dense,pallas,halo,pallas_halo,allgather) through the "
+                    "plan API; one JSON per backend is written to --json-dir")
     ap.add_argument("--json-dir", default=".",
                     help="directory for per-backend JSON results")
     args = ap.parse_args()
 
     from . import (bench_comm, bench_fig1_denoising, bench_fig2_methods,
-                   bench_kernels, bench_lasso)
+                   bench_kernels, bench_lasso, bench_scaling)
 
     backends = args.backend.split(",") if args.backend else None
     wanted = set((args.only or "fig1,fig2,lasso,comm,kernels").split(","))
@@ -45,6 +48,17 @@ def main() -> None:
         bench_comm.run(backends=backends, json_dir=args.json_dir)
     if "kernels" in wanted:
         bench_kernels.run(backends=backends, json_dir=args.json_dir)
+    if "scaling" in wanted:
+        if backends is None:
+            bench_scaling.run(backends=None, json_dir=args.json_dir)
+        else:
+            sharded = [b for b in backends
+                       if b in ("pallas_halo", "halo", "allgather")]
+            if sharded:
+                bench_scaling.run(backends=sharded, json_dir=args.json_dir)
+            else:
+                print("# scaling skipped: --backend lists no sharded "
+                      "backend (pallas_halo, halo, allgather)", flush=True)
 
 
 if __name__ == "__main__":

@@ -40,8 +40,8 @@ def main():
     y = f0 + p.noise_sigma * jax.random.normal(sub, f0.shape)
 
     order = None
-    if args.backend == "halo":
-        # halo needs a banded (spatially sorted) vertex order
+    if args.backend in ("halo", "pallas_halo"):
+        # the halo-exchange backends need a banded (spatially sorted) order
         g, order = graph.spatial_sort(g)
         y = y[jnp.asarray(order)]
 

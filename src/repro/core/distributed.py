@@ -1,15 +1,21 @@
-"""DEPRECATED shim — the sharded Algorithm 1/2/3 implementations moved to
-:mod:`repro.dist.backends` (halo / allgather) behind the GraphOperator
-backend registry.
+"""DEPRECATED shim — the sharded Algorithm 1/2/3 implementations live in
+the :mod:`repro.dist.backends` registry; this module only re-exports the
+``halo`` / ``allgather`` free functions for old callers.
 
-Prefer the unified API:
+Prefer the unified plan API, which dispatches through the registry
+(``repro.dist.available_backends()`` lists every strategy — ``dense``,
+``pallas``, ``halo``, ``pallas_halo``, ``allgather``, plus anything
+registered out of tree via ``repro.dist.register_backend``):
 
     op = repro.dist.GraphOperator(P, multipliers, lmax=lmax, K=K)
-    plan = op.plan(backend="halo", mesh=mesh)       # or "allgather"
+    plan = op.plan(backend="pallas_halo", mesh=mesh)
     plan.apply(f) / plan.apply_adjoint(a) / plan.solve_lasso(y, mu)
 
 The old free functions keep working from here (same signatures, including
-the caller-side padding contract) but new code should go through `plan()`.
+the caller-side padding contract) but new code should go through
+``plan()`` — newer backends such as ``pallas_halo`` have **no** free-
+function form and are reachable only via the registry.  See
+docs/ARCHITECTURE.md for the registry contract.
 """
 from __future__ import annotations
 

@@ -5,23 +5,31 @@
 * :mod:`repro.dist.backends`  — pluggable execution strategies
   (dense | pallas | halo | allgather) behind a registry.
 * :mod:`repro.dist.sharding`  — logical-axis `ShardingRules` / `make_rules`.
+* :mod:`repro.dist.commstats` — measured communication accounting
+  (`CommStats`, `plan_comm_stats`): counts the collectives a plan traces
+  to and converts them to the paper's 2K|E| message model.
 * :mod:`repro.dist.gossip`    — Chebyshev ring consensus (the paper's
   Algorithm 1 on the device ring) for fabric-free gradient averaging.
 """
-from . import gossip, sharding
+from . import commstats, gossip, sharding
 from .backends import available_backends, get_backend, register_backend
+from .commstats import CommStats, plan_comm_stats, verify_message_scaling
 from .operator import ExecutionPlan, GraphOperator, as_graph_operator
 from .sharding import ShardingRules, make_rules
 
 __all__ = [
+    "CommStats",
     "ExecutionPlan",
     "GraphOperator",
     "ShardingRules",
     "as_graph_operator",
     "available_backends",
+    "commstats",
     "get_backend",
     "gossip",
     "make_rules",
+    "plan_comm_stats",
     "register_backend",
     "sharding",
+    "verify_message_scaling",
 ]

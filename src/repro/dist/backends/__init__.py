@@ -13,10 +13,12 @@ plug in without touching any caller:
         return ExecutionPlan(op=op, backend="my-backend", ...)
 
 Built-in backends (imported at the bottom so their decorators run):
-  dense      — matvec against P as given (dense matrix or closure)
-  pallas     — Block-ELL SpMV + fused Chebyshev-step Pallas kernels
-  halo       — shard_map, ring halo exchange of boundary blocks (banded P)
-  allgather  — shard_map, all_gather of the iterate (general P)
+  dense       — matvec against P as given (dense matrix or closure)
+  pallas      — Block-ELL SpMV + fused Chebyshev-step Pallas kernels
+  halo        — shard_map, ring halo exchange of boundary blocks (banded P)
+  pallas_halo — shard_map, per-shard Block-ELL fused kernels, boundary-rows-
+                only halo exchange (banded P; the sharded hot path)
+  allgather   — shard_map, all_gather of the iterate (general P)
 """
 from __future__ import annotations
 
@@ -48,9 +50,11 @@ def available_backends() -> List[str]:
     return sorted(_REGISTRY)
 
 
-# Import order matters only in that halo must precede allgather (allgather
-# reuses halo's shard_map wrapper).  Each import registers its builder.
-from . import dense      # noqa: E402,F401
-from . import pallas     # noqa: E402,F401
-from . import halo       # noqa: E402,F401
-from . import allgather  # noqa: E402,F401
+# Import order matters only in that halo must precede allgather and
+# pallas_halo (both reuse halo's shard_map wrapper / partition machinery).
+# Each import registers its builder.
+from . import dense        # noqa: E402,F401
+from . import pallas       # noqa: E402,F401
+from . import halo         # noqa: E402,F401
+from . import pallas_halo  # noqa: E402,F401
+from . import allgather    # noqa: E402,F401

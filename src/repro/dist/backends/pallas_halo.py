@@ -1,0 +1,374 @@
+"""'pallas_halo' execution backend: sharded Block-ELL + fused Pallas kernels
+with boundary-row ("halo") exchange.
+
+This backend unites the two fastest paths in the registry:
+
+* the `pallas` backend's hot loop — Block-ELL SpMV + the fused Chebyshev
+  step kernel (`kernels.ops.fused_cheb_recurrence`), one HBM round-trip per
+  order — but run *per shard* inside a shard_map;
+* the `halo` backend's distribution strategy — a block-tridiagonal partition
+  of a banded (spatially sorted) P over a 1-D device mesh with ring
+  neighbour exchange per Chebyshev order.
+
+Where `halo` ships each shard's **entire** block (nl values) to both
+neighbours per order, this backend ships only the **boundary rows** that the
+neighbour actually reads: the halo width `h` is the bandwidth of the
+off-diagonal coupling blocks, so per order each shard sends 2·h values
+instead of 2·nl.  That is the TPU analog of the paper's accounting — one
+scalar per directed edge per order, 2K|E| messages per application
+(Section IV-B) — with the intra-shard edges folded into the local Block-ELL
+SpMV and only the cut edges crossing the network.
+
+Per-shard structure (shard s owns rows [s·nl, (s+1)·nl)):
+
+    y_s = D_s x_s  +  L_s x_{s-1}[-h:]  +  R_s x_{s+1}[:h]
+
+`D_s` is the shard's diagonal block in Block-ELL form driven through the
+Pallas SpMV kernel; `L_s`/`R_s` are the (nl, h) boundary couplings applied
+as small dense matmuls to the halo rows received from the ring neighbours.
+
+Communication per application: K orders x 2 ppermutes of an (h,)-block
+(forward/gram; (eta, h) for the adjoint) — measurable with
+:mod:`repro.dist.commstats` and compared against the paper's closed form in
+``benchmarks/bench_scaling.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ... import _compat  # noqa: F401  (jax.shard_map / axis_size on old jax)
+from ...core import chebyshev as cheb
+from ...core import graph as graphmod
+from ...core.lasso import soft_threshold
+from ...kernels import ops
+from ..sharding import ShardingRules, make_rules
+from . import register_backend
+from .halo import BandedPartition, pad_signal, partition_banded, _sharded
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Sharded Block-ELL partition
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardedBlockELL:
+    """Per-shard Block-ELL diagonal blocks + dense boundary couplings.
+
+    blocks:  (S, nrb, slots, br, bc) per-shard Block-ELL values of D_s
+    indices: (S, nrb, slots) int32 column-block index per slot
+    mask:    (S, nrb, slots) bool slot validity
+    left:    (S, nl, h) coupling of shard s's rows to the *last* h columns
+             of shard s-1 (zero for s = 0)
+    right:   (S, nl, h) coupling of shard s's rows to the *first* h columns
+             of shard s+1 (zero for s = S-1)
+    n:       logical (unpadded) global size; S * nl >= n
+    n_local: rows per shard (nl)
+    halo:    boundary bandwidth h (rows exchanged per direction per order)
+    """
+
+    blocks: Array
+    indices: Array
+    mask: Array
+    left: Array
+    right: Array
+    n: int
+    n_local: int
+    halo: int
+
+    @property
+    def n_shards(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def n_padded(self) -> int:
+        """Global padded signal size consumed by the plan (S * nl);
+        `halo.pad_signal` reads this, so the partition is passed to it
+        directly."""
+        return self.n_shards * self.n_local
+
+    @property
+    def nnz_blocks(self) -> int:
+        return int(np.asarray(self.mask).sum())
+
+
+def _coupling_bandwidth(left: np.ndarray, right: np.ndarray) -> int:
+    """Halo width h: how many boundary rows a neighbour actually reads.
+
+    `left[s]` couples shard s to the trailing columns of shard s-1 and
+    `right[s]` to the leading columns of shard s+1; h is the widest such
+    band over all shards (at least 1 so the exchange shapes stay static).
+    """
+    nl = left.shape[1]
+    h = 1
+    lc = np.nonzero(np.any(left != 0, axis=(0, 1)))[0]
+    if lc.size:
+        h = max(h, nl - int(lc.min()))
+    rc = np.nonzero(np.any(right != 0, axis=(0, 1)))[0]
+    if rc.size:
+        h = max(h, int(rc.max()) + 1)
+    return min(h, nl)
+
+
+def partition_block_ell(
+    P_dense: np.ndarray,
+    n_shards: int,
+    block: Tuple[int, int] = (8, 128),
+) -> Tuple[ShardedBlockELL, float]:
+    """Split P into per-shard Block-ELL diagonals + boundary couplings.
+
+    Returns (partition, leak); `leak` is the Frobenius norm of entries
+    outside the block-tridiagonal band (see `halo.partition_banded` — must
+    be ~0 for exactness, use `graph.spatial_sort` first).
+    """
+    banded, leak = partition_banded(np.asarray(P_dense), n_shards)
+    diag = np.asarray(banded.diag)
+    left = np.asarray(banded.left)
+    right = np.asarray(banded.right)
+    nl = banded.n_local
+    h = _coupling_bandwidth(left, right)
+
+    cells = [graphmod.to_block_ell(diag[s], block) for s in range(n_shards)]
+    slots = max(c.blocks.shape[1] for c in cells)
+    blocks, indices, mask = [], [], []
+    for c in cells:
+        pad = slots - c.blocks.shape[1]
+        blocks.append(np.pad(np.asarray(c.blocks),
+                             ((0, 0), (0, pad), (0, 0), (0, 0))))
+        indices.append(np.pad(np.asarray(c.indices), ((0, 0), (0, pad))))
+        mask.append(np.pad(np.asarray(c.mask), ((0, 0), (0, pad))))
+    return (
+        ShardedBlockELL(
+            blocks=jnp.asarray(np.stack(blocks)),
+            indices=jnp.asarray(np.stack(indices)),
+            mask=jnp.asarray(np.stack(mask)),
+            left=jnp.asarray(left[:, :, nl - h:]),
+            right=jnp.asarray(right[:, :, :h]),
+            n=banded.n,
+            n_local=nl,
+            halo=h,
+        ),
+        leak,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-shard matvec (runs inside shard_map)
+# ---------------------------------------------------------------------------
+def _halo_row_matvec(local_A: graphmod.BlockELL, left: Array, right: Array,
+                     nl: int, h: int, axis: str, use_pallas):
+    """Matvec along the last axis of x with a boundary-rows-only exchange.
+
+    x: (..., nl) local block.  Per call each shard ppermutes its first/last
+    h entries to its ring neighbours (the only inter-shard traffic), runs
+    the Pallas Block-ELL SpMV on its diagonal block, and applies the small
+    dense boundary couplings to the received halo rows.  The ring wraps;
+    the first/last shard's out-of-range contribution is killed by the zero
+    left/right coupling blocks.
+    """
+    size = jax.lax.axis_size(axis)
+    pad = local_A.padded_n - nl
+
+    def local_mv(v: Array) -> Array:
+        return ops.spmv(local_A, jnp.pad(v, (0, pad)),
+                        use_pallas=use_pallas)[:nl]
+
+    def mv(x: Array) -> Array:
+        head = x[..., :h]
+        tail = x[..., nl - h:]
+        if size > 1:
+            # boundary-row exchange: shard s receives s-1's tail (read by
+            # `left`) and s+1's head (read by `right`)
+            from_left = jax.lax.ppermute(
+                tail, axis, perm=[(i, (i + 1) % size) for i in range(size)])
+            from_right = jax.lax.ppermute(
+                head, axis, perm=[(i, (i - 1) % size) for i in range(size)])
+        else:
+            from_left, from_right = tail, head
+        y = local_mv(x) if x.ndim == 1 else jax.vmap(local_mv)(x)
+        y = y + jnp.einsum("ij,...j->...i", left, from_left)
+        y = y + jnp.einsum("ij,...j->...i", right, from_right)
+        return y
+
+    return mv
+
+
+def pallas_halo_bytes_per_apply(parts: ShardedBlockELL, K: int, eta: int = 1,
+                                dtype_bytes: int = 4) -> int:
+    """Collective-traffic model for one application: per order each shard
+    sends its h boundary rows left+right; K orders, S shards.  Contrast
+    `halo.halo_bytes_per_apply`, which ships the full nl block."""
+    return 2 * K * parts.n_shards * parts.halo * eta * dtype_bytes
+
+
+# ---------------------------------------------------------------------------
+# Plan builder
+# ---------------------------------------------------------------------------
+@register_backend("pallas_halo")
+def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
+          allow_leak: bool = False, block: Tuple[int, int] = (8, 128),
+          use_pallas: Optional[bool] = None, **options):
+    """Build an ExecutionPlan running the fused Pallas Chebyshev recurrence
+    per shard with boundary-row halo exchange.
+
+    Requires a dense, banded P (spatially sorted sensor graph) or a
+    precomputed `partition=` (a `ShardedBlockELL`, or a `halo.
+    BandedPartition` which is converted).  Without `mesh=`, a 1-D "graph"
+    mesh over every visible device is built.  `use_pallas` follows the
+    `kernels.ops` dispatch policy (None: native on TPU, jnp oracle on CPU).
+    """
+    from ..operator import ExecutionPlan
+
+    if mesh is None:
+        mesh = jax.make_mesh((len(jax.devices()),), ("graph",))
+    axis = axis or mesh.axis_names[0]
+    n_shards = int(mesh.shape[axis])
+    leak = 0.0
+    if partition is None:
+        if callable(op.P):
+            raise ValueError("pallas_halo backend needs a dense P or "
+                             "partition=")
+        partition, leak = partition_block_ell(np.asarray(op.P), n_shards,
+                                              block)
+        if leak > 1e-10 and not allow_leak:
+            raise ValueError(
+                f"P is not block-tridiagonal under {n_shards} shards "
+                f"(leak={leak:.3e}); spatial_sort the graph first, pass "
+                "allow_leak=True, or use backend='allgather'")
+    elif isinstance(partition, BandedPartition):
+        repacked, leak = partition_block_ell(
+            np.asarray(_banded_to_dense(partition)), partition.n_shards,
+            block)
+        partition = repacked
+    parts = partition
+    if parts.n_shards != n_shards:
+        raise ValueError(f"partition has {parts.n_shards} shards but mesh "
+                         f"axis {axis!r} has {n_shards}")
+    n, nl, h = parts.n, parts.n_local, parts.halo
+    coeffs = op.coeffs
+    lmax = op.lmax
+
+    def _mk_mv(blocks, indices, mask, left, right):
+        local_A = graphmod.BlockELL(blocks=blocks[0], indices=indices[0],
+                                    mask=mask[0], n=nl)
+        return _halo_row_matvec(local_A, left[0], right[0], nl, h, axis,
+                                use_pallas)
+
+    # PartitionSpecs through the logical-axis rules: every per-shard tensor
+    # is sharded on its leading "vertex"-block dimension.  The shared _BASE
+    # vocabulary maps "vertex" to the conventional "graph" mesh axis; a
+    # mesh with a differently-named axis gets a local override.
+    rules = (make_rules(mesh) if axis == "graph"
+             else ShardingRules(mapping={"vertex": axis}, mesh=mesh))
+    vspec = rules.spec("vertex")
+    mats = (parts.blocks, parts.indices, parts.mask, parts.left, parts.right)
+    mat_specs = (vspec,) * 5
+
+    def apply(f: Array) -> Array:
+        def run(blocks, indices, mask, left, right, xl, c):
+            mv = _mk_mv(blocks, indices, mask, left, right)
+            return ops.fused_cheb_recurrence(mv, xl, c, lmax,
+                                             use_pallas=use_pallas)
+
+        c2 = jnp.atleast_2d(jnp.asarray(coeffs, f.dtype))
+        out = _sharded(run, mesh, mat_specs + (vspec, P()),
+                       rules.spec(None, "vertex"))(*mats,
+                                                   pad_signal(f, parts),
+                                                   c2)
+        return out[:, :n]
+
+    def apply_adjoint(a: Array) -> Array:
+        def run(blocks, indices, mask, left, right, al, c):
+            mv = _mk_mv(blocks, indices, mask, left, right)
+            return cheb.cheb_apply_adjoint(mv, al, c, lmax,
+                                           matvec_batched=mv)
+
+        apad = jnp.pad(a, ((0, 0), (0, parts.n_padded - a.shape[1])))
+        c = jnp.asarray(coeffs, a.dtype)
+        return _sharded(run, mesh, mat_specs + (rules.spec(None, "vertex"),
+                                            P()),
+                        vspec)(*mats, apad, c)[:n]
+
+    def apply_gram(f: Array) -> Array:
+        def run(blocks, indices, mask, left, right, xl, d):
+            mv = _mk_mv(blocks, indices, mask, left, right)
+            return ops.fused_cheb_recurrence(mv, xl, d, lmax,
+                                             use_pallas=use_pallas)[0]
+
+        d = jnp.asarray(cheb.gram_coeffs(coeffs), f.dtype)[None]
+        return _sharded(run, mesh, mat_specs + (vspec, P()),
+                        vspec)(*mats, pad_signal(f, parts), d)[:n]
+
+    def solve_lasso(y, mu, gamma, n_iters):
+        from ...core.lasso import LassoResult
+
+        def run(blocks, indices, mask, left, right, yl, c, mu_arr):
+            mv = _mk_mv(blocks, indices, mask, left, right)
+            phi_y = ops.fused_cheb_recurrence(mv, yl, c, lmax,
+                                              use_pallas=use_pallas)
+            thresh = mu_arr[:, None] * gamma
+
+            def body(a, _):
+                back = cheb.cheb_apply_adjoint(mv, a, c, lmax,
+                                               matvec_batched=mv)
+                gram_a = ops.fused_cheb_recurrence(mv, back, c, lmax,
+                                                   use_pallas=use_pallas)
+                a_new = soft_threshold(a + gamma * (phi_y - gram_a), thresh)
+                return a_new, None
+
+            a0 = jnp.zeros_like(phi_y)
+            a_star, _ = jax.lax.scan(body, a0, None, length=n_iters)
+            y_star = cheb.cheb_apply_adjoint(mv, a_star, c, lmax,
+                                             matvec_batched=mv)
+            return a_star, y_star
+
+        c = jnp.asarray(coeffs, y.dtype)
+        mu_arr = jnp.asarray(mu, dtype=y.dtype)
+        a_star, y_star = _sharded(
+            run, mesh, mat_specs + (vspec, P(), P()),
+            (rules.spec(None, "vertex"), vspec),
+        )(*mats, pad_signal(y, parts), c, mu_arr)
+        return LassoResult(coeffs=a_star[:, :n], signal=y_star[:n],
+                           objective=jnp.nan, n_iters=n_iters)
+
+    return ExecutionPlan(
+        op=op, backend="pallas_halo",
+        apply=apply, apply_adjoint=apply_adjoint, apply_gram=apply_gram,
+        solve_lasso_fn=solve_lasso,
+        info={
+            "mesh_axis": axis,
+            "n_shards": n_shards,
+            "n_local": nl,
+            "halo_width": h,
+            "partition_leak": leak,
+            "block": block,
+            "nnz_blocks": parts.nnz_blocks,
+            "halo_bytes_per_apply": pallas_halo_bytes_per_apply(
+                parts, op.K, 1),
+            "halo_bytes_per_adjoint": pallas_halo_bytes_per_apply(
+                parts, op.K, op.eta),
+        },
+    )
+
+
+def _banded_to_dense(parts: BandedPartition) -> np.ndarray:
+    """Reassemble the dense (padded) P from a halo `BandedPartition`."""
+    S, nl = parts.n_shards, parts.n_local
+    diag = np.asarray(parts.diag)
+    left = np.asarray(parts.left)
+    right = np.asarray(parts.right)
+    out = np.zeros((S * nl, S * nl), diag.dtype)
+    for s in range(S):
+        r = slice(s * nl, (s + 1) * nl)
+        out[r, r] = diag[s]
+        if s > 0:
+            out[r, (s - 1) * nl: s * nl] = left[s]
+        if s < S - 1:
+            out[r, (s + 1) * nl: (s + 2) * nl] = right[s]
+    return out[: parts.n, : parts.n]

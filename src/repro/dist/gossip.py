@@ -19,6 +19,20 @@ Degradation paths (refs [31]-style robustness):
   * ``drop_left`` / ``drop_right`` — a device ignores its incoming link and
     substitutes its own state (a straggler/lost-link model: the ring
     degrades to a path graph, consensus stays bounded).
+
+Usage — gradient averaging without a fabric all-reduce (what
+``repro.launch.train --dp-mode gossip`` does)::
+
+    coeffs = consensus_coeffs(mesh.shape["data"])     # host-side, once
+
+    @partial(jax.shard_map, mesh=mesh, ...)
+    def step(batch, params):
+        grads = ...                                    # per-device grads
+        return gossip_mean_tree(grads, "data", coeffs) # ~= all-reduce mean
+
+Communication per call: ``K = ceil(n/2)`` neighbour-exchange rounds of the
+full payload per direction (measure with :mod:`repro.dist.commstats`);
+``consensus_error(n, coeffs)`` bounds the distance from the true mean.
 """
 from __future__ import annotations
 
@@ -103,7 +117,14 @@ def consensus_error(n: int, coeffs: Union[np.ndarray, Sequence[float]]) -> float
 # On-device gossip (runs inside shard_map)
 # ---------------------------------------------------------------------------
 def quantize_message(x: Array, bits: int = 8) -> Array:
-    """Symmetric per-message fake-int quantization (keeps dtype)."""
+    """Symmetric per-message fake-int quantization (keeps dtype).
+
+    Models an int-`bits` wire format: values are scaled by the message's
+    max-abs, rounded to ``2**(bits-1) - 1`` levels, and rescaled — the
+    traffic model is ``bits/32`` of the fp32 payload while the returned
+    array stays in the original dtype (simulation, not a cast).  All-zero
+    messages pass through unchanged (scale clamps to 1).
+    """
     levels = float(2 ** (bits - 1) - 1)
     scale = jnp.max(jnp.abs(x))
     scale = jnp.where(scale > 0, scale, 1.0)
@@ -150,6 +171,12 @@ def gossip_mean(x: Array, axis: str, coeffs, *, quantize: bool = False,
 
 
 def gossip_mean_tree(tree, axis: str, coeffs, *, quantize: bool = False):
-    """`gossip_mean` mapped over a pytree (gradient consensus in train.py)."""
+    """:func:`gossip_mean` mapped over a pytree of same-sharded leaves.
+
+    The gradient-consensus entry point used by ``repro.launch.train
+    --dp-mode gossip``: every leaf is averaged over the `axis` device ring
+    independently (one Chebyshev recurrence per leaf).  Must be called
+    inside a shard_map over `axis`, like :func:`gossip_mean`.
+    """
     return jax.tree_util.tree_map(
         lambda leaf: gossip_mean(leaf, axis, coeffs, quantize=quantize), tree)

@@ -1,13 +1,26 @@
 """Logical-axis sharding rules: one mapping from logical tensor axes to mesh
 axes, consumed everywhere (models, launch, dist backends).
 
-A :class:`ShardingRules` turns logical axis names ("batch", "embed", ...)
-into :class:`~jax.sharding.PartitionSpec` entries against a concrete mesh.
-The mapping is scheme-based: ``_BASE`` holds the tensor-parallel default and
-``_SCHEMES`` holds named overrides (fsdp, ...).  Rules are pure metadata —
-constructing them never touches device state, and `spec` silently drops
-mesh axes the mesh doesn't have (so one mapping serves 1-D test meshes,
-2-D single-pod meshes, and 3-D multi-pod meshes).
+A :class:`ShardingRules` turns logical axis names ("batch", "embed",
+"vertex", ...) into :class:`~jax.sharding.PartitionSpec` entries against a
+concrete mesh.  The mapping is scheme-based: ``_BASE`` holds the
+tensor-parallel default and ``_SCHEMES`` holds named overrides (fsdp, ...).
+Rules are pure metadata — constructing them never touches device state, and
+`spec` silently drops mesh axes the mesh doesn't have (so one mapping
+serves 1-D test meshes, 2-D single-pod meshes, and 3-D multi-pod meshes).
+
+Usage::
+
+    rules = make_rules(mesh, scheme="fsdp")
+    w_spec = rules.spec("embed", "ffn")        # PartitionSpec for a weight
+    x = rules.constrain(x, "batch", None, "embed")   # sharding constraint
+
+Two consumer families share this vocabulary: the LM substrate (models /
+launch, axes like "batch"/"embed"/"heads") and the sharded graph backend
+`repro.dist.backends.pallas_halo`, which resolves the "vertex" axis — one
+contiguous block of graph vertices per device — through `make_rules` for
+the conventional 1-D "graph" mesh (and builds a local override for meshes
+whose axis is named differently).
 """
 from __future__ import annotations
 
@@ -24,6 +37,9 @@ AxisTarget = Union[str, Tuple[str, ...], None]
 # (megatron-style) defaults: batch over the data axes, weight matrices
 # column/row split over 'model', everything else replicated.
 _BASE: Dict[str, AxisTarget] = {
+    # graph signals (dist backends: one contiguous vertex block per device
+    # on the 1-D "graph" mesh; see repro.dist.backends.halo / pallas_halo)
+    "vertex": "graph",
     # activations
     "batch": ("pod", "data"),
     "seq": None,

@@ -8,6 +8,12 @@ One order of Algorithm 1 after the sparse matvec `pt = P @ t_{k-1}`:
 Fusing the AXPYs keeps the iterate traffic at one HBM round-trip per order
 instead of four (the memory-bound part of the recurrence; see EXPERIMENTS.md
 §Perf for the accounting).
+
+Halo-aware tiling: the kernel is also the per-shard recurrence step of the
+`pallas_halo` backend, where it runs inside a shard_map on each shard's
+local block (size nl, generally *not* a 128 multiple).  The internal
+zero-pad-to-128 below is what makes the same tiling serve both the global
+(padded_n) and the per-shard (nl) iterate shapes.
 """
 from __future__ import annotations
 

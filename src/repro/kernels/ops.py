@@ -1,9 +1,22 @@
 """Public jit'd wrappers around the Pallas kernels.
 
+This module is the single dispatch point between the Pallas TPU kernels
+(`bcsr_spmv.block_ell_spmv`, `cheb_step.cheb_step`, ...) and their pure-jnp
+oracles in :mod:`repro.kernels.ref`.  Everything above it — the `pallas`
+and `pallas_halo` execution backends, the benchmarks, the tests — calls
+these wrappers and never touches `pallas_call` directly.
+
 Dispatch policy: on TPU the Pallas kernels run natively; on CPU (this
 container) `use_pallas=True` runs them under interpret=True (the kernel body
 executed in Python — used by the kernel test sweeps), and the default takes
 the pure-jnp reference path so smoke tests and benchmarks stay fast.
+
+Sharded use: :func:`fused_cheb_recurrence` is the matvec-generic form of the
+fused recurrence.  The `pallas_halo` backend calls it *inside* a shard_map
+with a halo-exchanging matvec over the per-shard Block-ELL tiles, so the
+same fused Chebyshev-step kernel serves both the single-device and the
+sharded hot path (per-shard sizes need not be 128-multiples — `cheb_step`
+pads its tiles internally).
 """
 from __future__ import annotations
 
@@ -35,11 +48,66 @@ def _resolve(use_pallas: Optional[bool]):
 
 
 def spmv(A: BlockELL, x: Array, use_pallas: Optional[bool] = None) -> Array:
-    """Block-ELL y = A @ x on the padded vector (padded_n,)."""
+    """Block-ELL y = A @ x on the padded vector (padded_n,).
+
+    The Algorithm-1 hot loop: one call per Chebyshev order, cost
+    proportional to the number of non-zero blocks (the paper's O(|E|)
+    per-order cost).  `x` must already be at `A.padded_n`; use
+    `fused_cheb_apply` / the `pallas` backend if you want padding handled
+    for you.
+    """
     use, interp = _resolve(use_pallas)
     if use:
         return block_ell_spmv(A.blocks, A.indices, x, interpret=interp)
     return ref.block_ell_spmv_ref(A.blocks, A.indices, x)
+
+
+def fused_cheb_recurrence(
+    matvec,
+    x: Array,
+    coeffs: Union[Array, np.ndarray],
+    lmax: float,
+    use_pallas: Optional[bool] = None,
+) -> Array:
+    """Fused shifted-Chebyshev recurrence over an arbitrary matvec.
+
+    The three-term recurrence of Algorithm 1 with the per-order AXPYs fused
+    into the `cheb_step` Pallas kernel (one HBM round-trip per order instead
+    of four).  `matvec` applies P to a 1-D iterate; it may contain
+    collectives — the `pallas_halo` backend passes a halo-exchanging matvec
+    and runs this whole function inside a shard_map, where `x` is the
+    per-shard block.
+
+    x: (n,) — any n; `cheb_step` pads its tiles to the 128 lane width
+    internally.  coeffs: (eta, K+1) (or (K+1,), treated as eta=1).
+    Returns (eta, n).
+    """
+    use, interp = _resolve(use_pallas)
+    c = jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype))
+    K = c.shape[1] - 1
+    alpha = float(lmax) / 2.0
+
+    t0 = x
+    acc = 0.5 * c[:, 0:1] * x[None, :]
+    if K == 0:
+        return acc
+    t1 = matvec(x) / alpha - x
+    acc = acc + c[:, 1:2] * t1[None, :]
+    if K == 1:
+        return acc
+
+    def body(carry, ck):
+        t_km1, t_km2, acc = carry
+        pt = matvec(t_km1)
+        if use:
+            tk, acc = cheb_step(pt, t_km1, t_km2, acc, ck,
+                                alpha=alpha, interpret=interp)
+        else:
+            tk, acc = ref.cheb_step_ref(pt, t_km1, t_km2, acc, ck, alpha=alpha)
+        return (tk, t_km1, acc), None
+
+    (_, _, acc), _ = jax.lax.scan(body, (t1, t0, acc), c[:, 2:].T)
+    return acc
 
 
 def fused_cheb_apply(
@@ -55,36 +123,11 @@ def fused_cheb_apply(
     fused step kernel pads its tiles to the 128 lane width internally).
     Returns (eta, padded_n).
     """
-    use, interp = _resolve(use_pallas)
-    c = jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype))
-    eta, Kp1 = c.shape
-    K = Kp1 - 1
-    alpha = float(lmax) / 2.0
 
     def mv(t):
         return spmv(A, t, use_pallas=use_pallas)
 
-    t0 = x
-    acc = 0.5 * c[:, 0:1] * x[None, :]
-    if K == 0:
-        return acc
-    t1 = mv(x) / alpha - x
-    acc = acc + c[:, 1:2] * t1[None, :]
-    if K == 1:
-        return acc
-
-    def body(carry, ck):
-        t_km1, t_km2, acc = carry
-        pt = mv(t_km1)
-        if use:
-            tk, acc = cheb_step(pt, t_km1, t_km2, acc, ck,
-                                alpha=alpha, interpret=interp)
-        else:
-            tk, acc = ref.cheb_step_ref(pt, t_km1, t_km2, acc, ck, alpha=alpha)
-        return (tk, t_km1, acc), None
-
-    (_, _, acc), _ = jax.lax.scan(body, (t1, t0, acc), c[:, 2:].T)
-    return acc
+    return fused_cheb_recurrence(mv, x, coeffs, lmax, use_pallas=use_pallas)
 
 
 def flash_attention(
@@ -98,6 +141,8 @@ def flash_attention(
     block_k: int = 128,
     use_pallas: Optional[bool] = None,
 ) -> Array:
+    """Flash attention (LM substrate): Pallas kernel on TPU, jnp oracle on
+    CPU.  q: (B, Hq, S, D); k/v: (B, Hkv, S, D) with Hkv | Hq (GQA)."""
     use, interp = _resolve(use_pallas)
     if use:
         return _flash(q, k, v, causal=causal, scale=scale,
@@ -113,6 +158,9 @@ def ista_update(
     gamma: float,
     use_pallas: Optional[bool] = None,
 ) -> Array:
+    """One fused ISTA update (Algorithm 3 line 5 + Eq. (32) shrinkage):
+    ``soft_threshold(a + gamma * (phi_y - gram_a), thresh)`` in a single
+    kernel pass.  a/phi_y/gram_a: (eta, N); thresh: (eta,) or (eta, 1)."""
     use, interp = _resolve(use_pallas)
     if thresh.ndim == 1:
         thresh = thresh[:, None]
@@ -123,6 +171,11 @@ def ista_update(
 
 
 def pad_for_kernels(x: Array, multiple: int = 1024) -> Array:
+    """Zero-pad the last axis up to `multiple` (kernel tile alignment).
+
+    Callers that hold the logical size are responsible for stripping the
+    padding from outputs; the execution backends do this internally.
+    """
     n = x.shape[-1]
     pad = (-n) % multiple
     if pad == 0:

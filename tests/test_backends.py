@@ -11,7 +11,7 @@ from repro.dist import (GraphOperator, available_backends, get_backend,
                         register_backend)
 from repro.dist.backends import _REGISTRY
 
-BACKENDS = ["dense", "pallas", "halo", "allgather"]
+BACKENDS = ["dense", "pallas", "halo", "pallas_halo", "allgather"]
 
 
 @pytest.fixture(scope="module")
@@ -28,7 +28,7 @@ def small_op():
 
 
 def _plan(op, backend):
-    if backend in ("halo", "allgather"):
+    if backend in ("halo", "pallas_halo", "allgather"):
         mesh = jax.make_mesh((1,), ("graph",))
         return op.plan(backend, mesh=mesh)
     return op.plan(backend)
@@ -88,20 +88,48 @@ def test_plans_are_jittable(small_op, backend):
                                np.asarray(plan.apply(f)), atol=1e-5)
 
 
-def test_solve_lasso_backend_equivalence(small_op):
-    """Algorithm 3 through the plan API: halo (fused shard_map ISTA) matches
-    the dense ISTA loop."""
+@pytest.mark.parametrize("backend", ["halo", "pallas_halo"])
+def test_solve_lasso_backend_equivalence(small_op, backend):
+    """Algorithm 3 through the plan API: the fused shard_map ISTA loops
+    (halo and pallas_halo) match the dense ISTA loop."""
     g, op = small_op
     y = jax.random.normal(jax.random.PRNGKey(6), (g.n_vertices,))
     mu = jnp.array([0.01, 0.75, 0.75])
     res_d = op.plan("dense").solve_lasso(y, mu, gamma=0.1, n_iters=15)
     mesh = jax.make_mesh((1,), ("graph",))
-    res_h = op.plan("halo", mesh=mesh).solve_lasso(y, mu, gamma=0.1,
-                                                   n_iters=15)
+    res_h = op.plan(backend, mesh=mesh).solve_lasso(y, mu, gamma=0.1,
+                                                    n_iters=15)
     np.testing.assert_allclose(np.asarray(res_h.signal),
                                np.asarray(res_d.signal), atol=1e-4)
     np.testing.assert_allclose(np.asarray(res_h.coeffs),
                                np.asarray(res_d.coeffs), atol=1e-4)
+
+
+def test_pallas_halo_partition_roundtrip():
+    """partition_block_ell: per-shard Block-ELL + boundary couplings
+    reassemble to the original banded matrix, and the halo width matches
+    the true coupling bandwidth (1 on a path graph)."""
+    from repro.core.graph import path_graph
+    from repro.dist.backends.pallas_halo import (partition_block_ell,
+                                                 _banded_to_dense)
+    from repro.dist.backends.halo import partition_banded
+
+    L = np.asarray(path_graph(32).laplacian())
+    parts, leak = partition_block_ell(L, 4)
+    assert leak == 0.0
+    assert parts.halo == 1 and parts.n_local == 8
+    # reassemble: diag blocks from Block-ELL + the boundary columns
+    banded, _ = partition_banded(L, 4)
+    dense = _banded_to_dense(banded)
+    np.testing.assert_allclose(dense, L, atol=0)
+    # Block-ELL diagonal blocks match the banded diagonal blocks
+    from repro.core.graph import BlockELL
+    for s in range(4):
+        A = BlockELL(blocks=parts.blocks[s], indices=parts.indices[s],
+                     mask=parts.mask[s], n=parts.n_local)
+        np.testing.assert_allclose(
+            np.asarray(A.todense())[:8, :8],
+            np.asarray(banded.diag[s]), atol=0)
 
 
 def test_register_backend_extensibility(small_op):
@@ -163,7 +191,7 @@ a = jax.random.normal(jax.random.PRNGKey(2), (op.eta, g.n_vertices))
 
 ref = op.plan("dense")
 out_ref, adj_ref, gram_ref = ref.apply(f), ref.apply_adjoint(a), ref.apply_gram(f)
-for backend in ("pallas", "halo", "allgather"):
+for backend in ("pallas", "halo", "pallas_halo", "allgather"):
     plan = (op.plan(backend, mesh=mesh) if backend != "pallas"
             else op.plan(backend))
     assert float(jnp.abs(plan.apply(f) - out_ref).max()) < 1e-4, backend

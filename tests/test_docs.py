@@ -1,0 +1,25 @@
+"""Docs stay consistent with the code (the CI `docs` job runs the same
+checker standalone; here it runs under pytest so local tier-1 catches
+drift too, plus a live cross-check of the registry scan)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+import check_docs
+
+
+def test_no_broken_intra_repo_links():
+    assert check_docs.broken_links() == []
+
+
+def test_every_registered_backend_documented():
+    assert check_docs.undocumented_backends() == []
+
+
+def test_static_backend_scan_matches_live_registry():
+    """The AST scan tools/check_docs.py relies on agrees with what the
+    registry actually exposes at import time."""
+    from repro.dist import available_backends
+
+    assert check_docs.registered_backends() == set(available_backends())

@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Docs consistency checker (stdlib-only; the CI `docs` job runs this).
+
+Two checks:
+
+1. **Intra-repo links** — every relative markdown link in README.md,
+   API.md and docs/*.md must resolve to an existing file (anchors are
+   stripped; http(s)/mailto links are ignored).
+2. **Backend coverage** — every execution backend registered in
+   `src/repro/dist/backends/` (found statically via the
+   `@register_backend("name")` decorators, so no jax import is needed)
+   must be mentioned in docs/ARCHITECTURE.md.
+
+Exit code 0 on success; 1 with a report on stderr otherwise.
+`tests/test_docs.py` runs the same functions under pytest and
+additionally cross-checks the static scan against the live registry.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+#: markdown inline links [text](target); images share the syntax.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def doc_files(repo: str = REPO):
+    """The markdown set the link check covers."""
+    files = [os.path.join(repo, "README.md"), os.path.join(repo, "API.md")]
+    docs_dir = os.path.join(repo, "docs")
+    if os.path.isdir(docs_dir):
+        for name in sorted(os.listdir(docs_dir)):
+            if name.endswith(".md"):
+                files.append(os.path.join(docs_dir, name))
+    return [f for f in files if os.path.isfile(f)]
+
+
+def broken_links(repo: str = REPO):
+    """[(file, raw_target, resolved_path), ...] for unresolvable links."""
+    broken = []
+    for path in doc_files(repo):
+        text = open(path, encoding="utf-8").read()
+        # links inside fenced code blocks are examples, not references
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for target in _LINK_RE.findall(text):
+            if re.match(r"^(https?:|mailto:|#)", target):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                broken.append((os.path.relpath(path, repo), target,
+                               os.path.relpath(resolved, repo)))
+    return broken
+
+
+def registered_backends(repo: str = REPO):
+    """Backend names declared via @register_backend decorators.
+
+    AST-based so docstring examples (`@register_backend("my-backend")` in
+    prose) don't count — only real decorators on real functions do.
+    """
+    backends_dir = os.path.join(repo, "src", "repro", "dist", "backends")
+    names = set()
+    for name in sorted(os.listdir(backends_dir)):
+        if not name.endswith(".py"):
+            continue
+        src = open(os.path.join(backends_dir, name), encoding="utf-8").read()
+        tree = ast.parse(src, filename=name)
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for deco in node.decorator_list:
+                if (isinstance(deco, ast.Call)
+                        and getattr(deco.func, "id",
+                                    getattr(deco.func, "attr", None))
+                        == "register_backend"
+                        and deco.args
+                        and isinstance(deco.args[0], ast.Constant)
+                        and isinstance(deco.args[0].value, str)):
+                    names.add(deco.args[0].value)
+    return names
+
+
+def undocumented_backends(repo: str = REPO):
+    """Registered backend names missing from docs/ARCHITECTURE.md."""
+    arch = os.path.join(repo, "docs", "ARCHITECTURE.md")
+    if not os.path.isfile(arch):
+        return sorted(registered_backends(repo))  # everything is missing
+    text = open(arch, encoding="utf-8").read()
+    return sorted(n for n in registered_backends(repo)
+                  if f"`{n}`" not in text and n not in text)
+
+
+def main() -> int:
+    failures = 0
+    for path, target, resolved in broken_links():
+        print(f"broken link: {path}: ({target}) -> {resolved}",
+              file=sys.stderr)
+        failures += 1
+    missing = undocumented_backends()
+    for name in missing:
+        print(f"backend {name!r} is registered but not documented in "
+              "docs/ARCHITECTURE.md", file=sys.stderr)
+        failures += 1
+    if failures:
+        print(f"{failures} docs problem(s)", file=sys.stderr)
+        return 1
+    n_files = len(doc_files())
+    n_backends = len(registered_backends())
+    print(f"docs OK: {n_files} files link-clean, "
+          f"{n_backends} backends documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
