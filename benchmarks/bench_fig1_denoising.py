@@ -38,7 +38,8 @@ def run(n_trials: int = 20, n: int = None):
     lam, U = np.linalg.eigh(np.asarray(g0.laplacian()))
     R = U @ np.diag(gfilt(lam)) @ U.T
     probe = np.asarray(jax.random.normal(key, (n, 8)))
-    approx = np.asarray(op.apply(jnp.asarray(probe)))
+    # (..., N) contract: the 8 probe columns ride one sweep as a batch
+    approx = np.asarray(op.apply(jnp.asarray(probe.T))).T
     opnorm_est = np.linalg.norm(R @ probe - approx, 2) / np.linalg.norm(probe, 2)
     row("fig1e_opnorm_err", 0.0, f"||R-R~||~={opnorm_est:.3e}")
 

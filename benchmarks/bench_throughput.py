@@ -1,0 +1,117 @@
+"""Batched-execution throughput: signals/sec per backend at B in {1, 8, 64}.
+
+The tentpole claim of the batched (..., N) contract is that B signals ride
+one Chebyshev sweep (the recurrence is linear, Section III-D), so
+signals/sec should grow superlinearly in B until the matvec saturates.
+This benchmark measures it: for every backend it times
+``jax.jit(plan.apply)`` on a (B, N) stack and reports B / wall_time, then
+writes one ``BENCH_throughput.json`` (repo root by default) recording the
+whole sweep — the perf trajectory the CI throughput-smoke step and the
+acceptance gate (pallas: B=64 at >= 4x the B=1 signals/sec) read.
+
+    PYTHONPATH=src python -m benchmarks.bench_throughput \
+        [--n 500] [--k 20] [--batches 1,8,64] [--json-path BENCH_throughput.json]
+"""
+import argparse
+import os
+
+import jax
+import numpy as np
+
+from .common import row, time_fn
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_JSON = os.path.join(REPO_ROOT, "BENCH_throughput.json")
+DEFAULT_BACKENDS = ("dense", "pallas", "halo", "pallas_halo", "allgather")
+DEFAULT_BATCHES = (1, 8, 64)
+
+
+def run(backends=None, batch_sizes=DEFAULT_BATCHES, n=500, K=20, J=2,
+        json_path=DEFAULT_JSON, iters=10):
+    """Sweep plan.apply throughput over batch sizes; returns the result dict
+    (also written to `json_path` unless it is falsy)."""
+    from repro.core import graph, wavelets
+    from repro.dist import GraphOperator
+
+    backends = list(backends or DEFAULT_BACKENDS)
+    key = jax.random.PRNGKey(0)
+    # connection radius ~ 1/sqrt(n) keeps the expected degree (and the
+    # chance of a connected draw) stable across sizes
+    radius = 0.075 * float(np.sqrt(500.0 / n))
+    g, key = graph.connected_sensor_graph(key, n=n, theta=radius,
+                                          kappa=radius)
+    gs, _ = graph.spatial_sort(g)  # banded order so halo backends are exact
+    lmax = gs.lambda_max_bound()
+    op = GraphOperator(P=gs.laplacian(),
+                       multipliers=wavelets.sgwt_multipliers(lmax, J=J),
+                       lmax=lmax, K=K)
+    results = {}
+    for backend in backends:
+        plan = op.plan(backend)
+        apply_jit = jax.jit(plan.apply)
+        per_batch = {}
+        for B in batch_sizes:
+            f = jax.random.normal(jax.random.PRNGKey(B), (B, g.n_vertices))
+            us = time_fn(apply_jit, f, iters=iters)
+            sps = B / (us * 1e-6)
+            per_batch[str(B)] = {"us_per_call": us, "signals_per_sec": sps}
+            row(f"throughput_{backend}_B{B}", us,
+                f"signals_per_sec={sps:.0f}")
+        b0 = per_batch[str(batch_sizes[0])]["signals_per_sec"]
+        bmax = per_batch[str(batch_sizes[-1])]["signals_per_sec"]
+        per_batch["speedup_maxB_vs_1"] = bmax / b0 if b0 else float("nan")
+        results[backend] = per_batch
+    payload = {
+        "bench": "throughput",
+        "n": int(g.n_vertices),
+        "K": int(op.K),
+        "eta": int(op.eta),
+        "batch_sizes": [int(b) for b in batch_sizes],
+        "device_count": len(jax.devices()),
+        "backend_default": jax.default_backend(),
+        "results": results,
+    }
+    if json_path:
+        import json
+
+        parent = os.path.dirname(os.path.abspath(json_path))
+        os.makedirs(parent, exist_ok=True)
+        with open(json_path, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}", flush=True)
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=500)
+    ap.add_argument("--k", type=int, default=20)
+    ap.add_argument("--batches", default="1,8,64")
+    ap.add_argument("--backends", default=",".join(DEFAULT_BACKENDS))
+    ap.add_argument("--json-path", default=DEFAULT_JSON,
+                    help="output JSON; '' disables writing")
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless pallas B=max >= --check-min x B=1 "
+                    "signals/sec")
+    ap.add_argument("--check-min", type=float, default=4.0,
+                    help="minimum pallas batched speedup for --check; CI "
+                    "smoke uses a lower bar than the tracked trajectory "
+                    "because few-iteration wall-clock ratios are noisy on "
+                    "shared runners")
+    args = ap.parse_args()
+    batches = tuple(int(b) for b in args.batches.split(","))
+    payload = run(backends=args.backends.split(","), batch_sizes=batches,
+                  n=args.n, K=args.k, json_path=args.json_path,
+                  iters=args.iters)
+    if args.check:
+        speedup = payload["results"]["pallas"]["speedup_maxB_vs_1"]
+        assert speedup >= args.check_min, (
+            f"pallas batched speedup {speedup:.2f}x < {args.check_min}x — "
+            "batching is not amortizing the structure sweeps")
+        print(f"# throughput gate OK: pallas {speedup:.2f}x at "
+              f"B={batches[-1]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,9 @@ configuration.  --backend sweeps bench_kernels/bench_comm through the
 JSON file per backend to --json-dir.  The `scaling` benchmark
 (bench_scaling) measures messages-per-apply with repro.dist.commstats and
 checks them against the paper's 2K|E| closed form across graph sizes.
+The `throughput` benchmark (bench_throughput) sweeps batch sizes
+B in {1, 8, 64} through every backend's batched apply and writes the
+repo-root BENCH_throughput.json signals/sec trajectory.
 """
 import argparse
 import sys
@@ -22,7 +25,7 @@ def main() -> None:
                     help="paper-scale trial counts")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
-                    "fig1,fig2,lasso,comm,kernels,scaling")
+                    "fig1,fig2,lasso,comm,kernels,scaling,throughput")
     ap.add_argument("--backend", default=None,
                     help="comma-separated execution backends to sweep "
                     "(dense,pallas,halo,pallas_halo,allgather) through the "
@@ -32,10 +35,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_comm, bench_fig1_denoising, bench_fig2_methods,
-                   bench_kernels, bench_lasso, bench_scaling)
+                   bench_kernels, bench_lasso, bench_scaling,
+                   bench_throughput)
 
     backends = args.backend.split(",") if args.backend else None
-    wanted = set((args.only or "fig1,fig2,lasso,comm,kernels").split(","))
+    wanted = set((args.only or
+                  "fig1,fig2,lasso,comm,kernels,throughput").split(","))
     print("name,us_per_call,derived")
     if "fig1" in wanted:
         bench_fig1_denoising.run(n_trials=1000 if args.full else 20)
@@ -48,6 +53,19 @@ def main() -> None:
         bench_comm.run(backends=backends, json_dir=args.json_dir)
     if "kernels" in wanted:
         bench_kernels.run(backends=backends, json_dir=args.json_dir)
+    if "throughput" in wanted:
+        # B-sweep of the batched (..., N) contract.  The tracked repo-root
+        # BENCH_throughput.json (the full 5-backend trajectory) is only
+        # rewritten by a default full sweep; --backend subsets or an
+        # explicit --json-dir write next to the other bench JSONs instead.
+        import os
+
+        if backends is None and args.json_dir == ".":
+            json_path = bench_throughput.DEFAULT_JSON
+        else:
+            json_path = os.path.join(args.json_dir, "BENCH_throughput.json")
+        bench_throughput.run(backends=backends, json_path=json_path,
+                             iters=20 if args.full else 5)
     if "scaling" in wanted:
         if backends is None:
             bench_scaling.run(backends=None, json_dir=args.json_dir)

@@ -117,8 +117,9 @@ def approx_error_bound(
 # Operator application — Algorithm 1 / Eq. (17)
 # ---------------------------------------------------------------------------
 def _outer(c: Array, t: Array) -> Array:
-    """(eta,) x t.shape -> (eta,) + t.shape scaled copies."""
-    return c[(...,) + (None,) * t.ndim] * t[None, ...]
+    """(eta,) x (..., N) -> (..., eta, N): per-multiplier scaled copies,
+    the eta axis inserted before the vertex axis."""
+    return c[:, None] * t[..., None, :]
 
 
 def cheb_apply(
@@ -129,13 +130,17 @@ def cheb_apply(
 ) -> Array:
     """Compute Phi_tilde x for a union of multipliers given by `coeffs`.
 
-    matvec: linear map applying P along the leading axis of its argument
-            (works for (N,) vectors and (N, cols) matrices).
+    matvec: linear map applying P along the *last* axis of its argument,
+            broadcasting over any leading batch dims ((N,) and (..., N)
+            inputs both work).
+    x: (..., N) — leading axes are batch signals riding the same recurrence.
     coeffs: (K+1,) single multiplier or (eta, K+1) union.
-    Returns x.shape (single) or (eta,) + x.shape (union).
+    Returns (..., N) (single) or (..., eta, N) (union).
 
     The body performs exactly one matvec per Chebyshev order — the same
-    communication/computation structure as Algorithm 1 lines 6-10.
+    communication/computation structure as Algorithm 1 lines 6-10 — and the
+    recurrence is linear, so every batch signal shares the K rounds
+    (Section III-D's shared-rounds trick generalized to arbitrary batches).
     """
     single = jnp.asarray(coeffs).ndim == 1
     c = jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype))
@@ -145,7 +150,7 @@ def cheb_apply(
     t0 = x
     acc = _outer(0.5 * c[:, 0], t0)
     if K == 0:
-        return acc[0] if single else acc
+        return acc[..., 0, :] if single else acc
 
     # Tbar_1(P) x = (P x)/alpha - x     (Algorithm 1 line 5)
     t1 = matvec(x) / alpha - x
@@ -160,7 +165,7 @@ def cheb_apply(
             return (t_k, t_km1, acc), None
 
         (_, _, acc), _ = jax.lax.scan(body, (t1, t0, acc), c[:, 2:].T)
-    return acc[0] if single else acc
+    return acc[..., 0, :] if single else acc
 
 
 def cheb_apply_adjoint(
@@ -172,25 +177,26 @@ def cheb_apply_adjoint(
 ) -> Array:
     """Compute Phi_tilde^* a per Eq. (19) / Algorithm 2.
 
-    a: (eta,) + base_shape stacked coefficient signals a_j.
+    a: (..., eta, N) stacked coefficient signals a_j (eta on axis -2,
+    leading axes are batch).
     coeffs: (eta, K+1).
-    Returns base_shape. Each Chebyshev order applies P to all eta streams at
-    once (the paper's length-eta messages).
+    Returns (..., N). Each Chebyshev order applies P to all eta streams (and
+    all batch signals) at once — the paper's length-eta messages.
 
-    matvec_batched: optional map applying P to all eta streams in one call
-    (used by the sharded path so one collective moves all streams, exactly
-    the paper's single length-eta message per round); defaults to
-    vmap(matvec).
+    matvec_batched: deprecated alias kept for old callers; `matvec` itself
+    must broadcast over leading dims under the (..., N) contract, so the
+    eta axis needs no special handling.  If given, it is used instead of
+    `matvec`.
     """
     c = jnp.asarray(coeffs, dtype=a.dtype)
-    assert c.ndim == 2 and a.shape[0] == c.shape[0], "eta mismatch"
+    assert c.ndim == 2 and a.shape[-2] == c.shape[0], "eta mismatch"
     K = c.shape[1] - 1
     alpha = lmax / 2.0
-    mv = matvec_batched if matvec_batched is not None else jax.vmap(matvec)
+    mv = matvec_batched if matvec_batched is not None else matvec
 
     def combine(ck: Array, t: Array) -> Array:
-        # sum_j ck[j] * t[j]
-        return jnp.tensordot(ck, t, axes=1)
+        # sum_j ck[j] * t[..., j, :]
+        return jnp.einsum("j,...jn->...n", ck, t)
 
     t0 = a
     acc = combine(0.5 * c[:, 0], t0)
@@ -257,6 +263,8 @@ def cheb_apply_gram(
     coeffs: np.ndarray,
     lmax: float,
 ) -> Array:
-    """Phi_tilde^* Phi_tilde x via the product coefficients (Section IV-C)."""
+    """Phi_tilde^* Phi_tilde x via the product coefficients (Section IV-C).
+
+    x: (..., N) -> (..., N); batch signals share the 2K exchange rounds."""
     d = gram_coeffs(coeffs)
     return cheb_apply(matvec, x, jnp.asarray(d, dtype=x.dtype), lmax)

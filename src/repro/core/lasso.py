@@ -29,16 +29,48 @@ def soft_threshold(z: Array, thresh: Array) -> Array:
 
 
 def lasso_objective(op: UnionMultiplier, y: Array, a: Array, mu: Array) -> Array:
+    """Eq. (33) objective; for batched y/a the objectives are summed over
+    the batch (each signal's problem is separable, so the sum is what the
+    batched ISTA minimizes)."""
     resid = y - op.apply_adjoint(a)
     return 0.5 * jnp.sum(resid * resid) + jnp.sum(mu * jnp.abs(a))
 
 
 @dataclasses.dataclass
 class LassoResult:
-    coeffs: Array       # a_*, shape (eta, N)
-    signal: Array       # Phi~* a_*, shape (N,)
+    coeffs: Array       # a_*, shape (..., eta, N) — leading batch dims of y
+    signal: Array       # Phi~* a_*, shape (..., N)
     objective: Array    # objective value per recorded iteration
     n_iters: int
+    fused: bool = False  # True iff a backend's in-shard_map ISTA ran
+
+
+def _mu_threshold(mu: Union[float, Array], eta: int, dtype, gamma: float,
+                  n: Optional[int] = None) -> Array:
+    """Shrinkage threshold mu*gamma broadcastable against a (..., eta, N).
+
+    mu: scalar (shared), (eta,) per-scale (the paper's 0.01 / 0.75 split),
+    (..., eta) per-signal-per-scale for batched solves, or — when the
+    vertex count `n` is given — (..., eta, N) per-vertex weights.  When
+    ``n == eta`` an (eta, n)-shaped mu is read as per-vertex (the
+    pre-batch meaning of a 2-D mu).
+    """
+    mu_arr = jnp.asarray(mu, dtype=dtype)
+    if mu_arr.ndim == 0:
+        mu_arr = jnp.full((eta,), mu_arr)
+    if (n is not None and mu_arr.ndim >= 2
+            and mu_arr.shape[-1] == n and mu_arr.shape[-2] == eta):
+        return mu_arr * gamma  # per-vertex: already (..., eta, N)
+    if mu_arr.shape[-1] != eta:
+        per_vertex_hint = (
+            f", or (..., eta, N) with N={n} for per-vertex weights"
+            if n is not None else
+            "; per-vertex (..., eta, N) weights are not supported on this "
+            "(fused/padded) path — use the generic ISTA loop")
+        raise ValueError(
+            f"mu trailing axis must be eta={eta}{per_vertex_hint}; "
+            f"got shape {mu_arr.shape}")
+    return mu_arr[..., None] * gamma
 
 
 def distributed_lasso(
@@ -53,9 +85,13 @@ def distributed_lasso(
     backend: Optional[str] = None,
     mesh=None,
 ) -> LassoResult:
-    """Algorithm 3. `mu` may be a scalar, an (eta,)-vector (per-scale weights,
-    as in the paper: 0.01 for scaling coefficients, 0.75 for wavelets), or a
-    full (eta, N) array.
+    """Algorithm 3. `y` may be a single (N,) signal or a batched (..., N)
+    stack — every signal rides the same Chebyshev exchange rounds (the
+    recurrence is linear).  `mu` may be a scalar, an (eta,)-vector
+    (per-scale weights, as in the paper: 0.01 for scaling coefficients,
+    0.75 for wavelets), a per-signal (..., eta) array for batched y, or a
+    per-vertex (..., eta, N) array (the fused backend paths support the
+    first three; per-vertex weights run the generic loop here).
 
     `op` may be a UnionMultiplier/GraphOperator or an already-built
     ExecutionPlan; passing `backend=` (plus `mesh=` for sharded backends)
@@ -75,22 +111,17 @@ def distributed_lasso(
                 and soft_threshold_fn is soft_threshold):
             return plan.solve_lasso(y, mu, gamma=gamma, n_iters=n_iters)
         op = plan
-    eta = op.eta
-    mu_arr = jnp.asarray(mu, dtype=y.dtype)
-    if mu_arr.ndim == 0:
-        mu_arr = jnp.full((eta, 1), mu_arr)
-    elif mu_arr.ndim == 1:
-        mu_arr = mu_arr[:, None]
+    thresh = _mu_threshold(mu, op.eta, y.dtype, gamma, n=y.shape[-1])
 
-    phi_y = op.apply(y)  # Algorithm 3 line 3 (stored)
+    phi_y = op.apply(y)  # Algorithm 3 line 3 (stored); (..., eta, N)
     a = jnp.zeros_like(phi_y) if a0 is None else a0
-    thresh = mu_arr * gamma
 
     def body(a, _):
         # line 5: Phi~ Phi~* a    (Algorithm 2 then Algorithm 1)
         gram_a = op.apply(op.apply_adjoint(a))
         a_new = soft_threshold_fn(a + gamma * (phi_y - gram_a), thresh)
-        obj = lasso_objective(op, y, a_new, mu_arr) if record_objective else jnp.nan
+        obj = (lasso_objective(op, y, a_new, thresh / gamma)
+               if record_objective else jnp.nan)
         return a_new, obj
 
     a_final, objs = jax.lax.scan(body, a, None, length=n_iters)
@@ -110,15 +141,9 @@ def distributed_lasso_masked(
     """Algorithm 3 with a vertex observation mask M (data term
     ||M(y - Phi~* a)||^2/2): the ISTA gradient picks up M elementwise —
     still fully local, used by the cross-validation below."""
-    eta = op.eta
-    mu_arr = jnp.asarray(mu, dtype=y.dtype)
-    if mu_arr.ndim == 0:
-        mu_arr = jnp.full((eta, 1), mu_arr)
-    elif mu_arr.ndim == 1:
-        mu_arr = mu_arr[:, None]
+    thresh = _mu_threshold(mu, op.eta, y.dtype, gamma, n=y.shape[-1])
     m = mask.astype(y.dtype)
     phi_my = op.apply(m * y)
-    thresh = mu_arr * gamma
 
     def body(a, _):
         resid = m * op.apply_adjoint(a)

@@ -28,12 +28,18 @@ Array = jax.Array
 
 
 def _as_matvec(P: Union[Array, Callable[[Array], Array]]):
+    """P as a map along the *last* axis of its argument.
+
+    The repo-wide signal contract is (..., N): matvecs contract the trailing
+    vertex axis and broadcast over any leading batch dims.  Callable P must
+    follow the same convention (see API.md, "Batched signals").
+    """
     if callable(P):
         return P
     Pm = jnp.asarray(P)
 
     def mv(x: Array) -> Array:
-        return Pm @ x
+        return jnp.einsum("ij,...j->...i", Pm, x)
 
     return mv
 
@@ -64,20 +70,22 @@ class UnionMultiplier:
 
     # -- Chebyshev-approximate applications ---------------------------------
     def apply(self, f: Array) -> Array:
-        """Phi_tilde f; shape (eta,) + f.shape (or f.shape when eta == 1 and
-        a single multiplier was given as a 1-element list the caller can
-        squeeze)."""
+        """Phi_tilde f; f: (..., N) -> (..., eta, N).  Leading axes are
+        batch signals sharing the K communication rounds (the recurrence is
+        linear, Section III-D)."""
         out = cheb.cheb_apply(
             self.matvec, f, jnp.asarray(self.coeffs, f.dtype), self.lmax
         )
         return out
 
     def apply_adjoint(self, a: Array) -> Array:
+        """Phi_tilde^* a; a: (..., eta, N) -> (..., N)."""
         return cheb.cheb_apply_adjoint(
             self.matvec, a, jnp.asarray(self.coeffs, a.dtype), self.lmax
         )
 
     def apply_gram(self, f: Array) -> Array:
+        """Phi_tilde^* Phi_tilde f; f: (..., N) -> (..., N)."""
         return cheb.cheb_apply_gram(self.matvec, f, self.coeffs, self.lmax)
 
     # -- Exact oracle ---------------------------------------------------------
@@ -89,22 +97,25 @@ class UnionMultiplier:
         return lam, U
 
     def exact_apply(self, f: Array) -> Array:
-        """Phi f by Eq. (3) — dense eigendecomposition, validation only."""
+        """Phi f by Eq. (3) — dense eigendecomposition, validation only.
+
+        f: (..., N) -> (..., eta, N), matching the Chebyshev `apply`."""
         lam, U = self._eig
-        fhat = U.T @ f
+        fhat = jnp.einsum("...i,ij->...j", f, U)  # U^T f along the last axis
         outs = []
         for g in self.multipliers:
             glam = jnp.asarray(g(np.asarray(lam)), dtype=f.dtype)
-            outs.append(U @ (glam[:, None] * fhat if fhat.ndim == 2 else glam * fhat))
-        return jnp.stack(outs, axis=0)
+            outs.append(jnp.einsum("...j,ij->...i", glam * fhat, U))
+        return jnp.stack(outs, axis=-2)
 
     def exact_apply_adjoint(self, a: Array) -> Array:
+        """a: (..., eta, N) -> (..., N)."""
         lam, U = self._eig
         acc = None
         for j, g in enumerate(self.multipliers):
             glam = jnp.asarray(g(np.asarray(lam)), dtype=a.dtype)
-            ahat = U.T @ a[j]
-            term = U @ (glam[:, None] * ahat if ahat.ndim == 2 else glam * ahat)
+            ahat = jnp.einsum("...i,ij->...j", a[..., j, :], U)
+            term = jnp.einsum("...j,ij->...i", glam * ahat, U)
             acc = term if acc is None else acc + term
         return acc
 
@@ -164,10 +175,10 @@ class ScalarMultiplier:
     union: UnionMultiplier
 
     def apply(self, f: Array) -> Array:
-        return self.union.apply(f)[0]
+        return self.union.apply(f)[..., 0, :]
 
     def exact_apply(self, f: Array) -> Array:
-        return self.union.exact_apply(f)[0]
+        return self.union.exact_apply(f)[..., 0, :]
 
     def error_bound(self) -> float:
         return self.union.error_bound()

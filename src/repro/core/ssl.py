@@ -60,15 +60,12 @@ def semi_supervised_classify(
     g = filters.ssl_multiplier(h, tau)
     R = GraphOperator(P=P, multipliers=[g], lmax=lmax, K=K)
     Y = label_matrix(labels, labeled_mask, n_classes)  # (N, kappa)
-    # One union application on the matrix signal: the Chebyshev recurrence
-    # (Algorithm 1) runs once with length-kappa messages.  Non-dense
-    # backends take 1-D signals only, so they classify column-by-column.
+    # One batched application on the class columns: every backend takes
+    # (..., N) signals, so the kappa class columns ride the K communication
+    # rounds together (Algorithm 1 runs once with length-kappa messages) —
+    # no per-column loop on any backend.
     plan = R.plan(backend, mesh=mesh)
-    if backend == "dense":
-        F = plan.apply(Y)[0]
-    else:
-        F = jnp.stack([plan.apply(Y[:, j])[0] for j in range(n_classes)],
-                      axis=1)
+    F = plan.apply(Y.T)[..., 0, :].T  # (kappa, N) batch -> (N, kappa) scores
     return SSLResult(scores=F, predictions=jnp.argmax(F, axis=1))
 
 

@@ -16,14 +16,19 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ... import _compat  # noqa: F401
 from ...core import chebyshev as cheb
+from ...kernels.ops import pad_trailing
 from . import register_backend
-from .halo import _sharded
+from .halo import _sharded, _vspec
 
 Array = jax.Array
 
 
 def _allgather_matvec(rows, axis: str):
-    """rows: (nl, N_padded) local row block; x gathered each application."""
+    """rows: (nl, N_padded) local row block; x gathered each application.
+
+    x: (..., nl) — one gather moves every leading batch / eta stream in the
+    same round (the vertex axis stays last, so `axis=x.ndim - 1` is the
+    gather axis for any batch rank)."""
 
     def mv(x: Array) -> Array:
         x_full = jax.lax.all_gather(x, axis, axis=x.ndim - 1, tiled=True)
@@ -41,7 +46,8 @@ def dist_cheb_apply_allgather(
     axis: str = "graph",
 ) -> Array:
     """Sharded Phi_tilde x for general (non-banded) P: row-block sharding of
-    P, one all_gather of the iterate per Chebyshev order."""
+    P, one all_gather of the iterate per Chebyshev order.  x: (..., n_padded)
+    -> (..., eta, n_padded) ((..., n_padded) for 1-D coeffs)."""
     single = getattr(coeffs, "ndim", None) == 1 or (
         not hasattr(coeffs, "ndim") and np.asarray(coeffs).ndim == 1)
     c = jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype))
@@ -51,9 +57,10 @@ def dist_cheb_apply_allgather(
         return cheb.cheb_apply(mv, xl, c, lmax)
 
     out = _sharded(
-        run, mesh, (P(axis, None), P(axis), P()), P(None, axis)
+        run, mesh, (P(axis, None), _vspec(x.ndim, axis), P()),
+        _vspec(x.ndim + 1, axis)
     )(P_dense, x, c)
-    return out[0] if single else out
+    return out[..., 0, :] if single else out
 
 
 def dist_cheb_apply_adjoint_allgather(
@@ -65,15 +72,17 @@ def dist_cheb_apply_adjoint_allgather(
     axis: str = "graph",
 ) -> Array:
     """Sharded Phi_tilde^* a (Algorithm 2) with all-gather matvecs.
-    a: (eta, n_padded); one gather moves all eta streams per order."""
+    a: (..., eta, n_padded) -> (..., n_padded); one gather moves all eta
+    streams (and all batch signals) per order."""
     c = jnp.asarray(coeffs, dtype=a.dtype)
 
     def run(rows, al, c):
         mv = _allgather_matvec(rows, axis)
-        return cheb.cheb_apply_adjoint(mv, al, c, lmax, matvec_batched=mv)
+        return cheb.cheb_apply_adjoint(mv, al, c, lmax)
 
     return _sharded(
-        run, mesh, (P(axis, None), P(None, axis), P()), P(axis)
+        run, mesh, (P(axis, None), _vspec(a.ndim, axis), P()),
+        _vspec(a.ndim - 1, axis)
     )(P_dense, a, c)
 
 
@@ -85,7 +94,8 @@ def dist_cheb_apply_gram_allgather(
     lmax: float,
     axis: str = "graph",
 ) -> Array:
-    """Sharded Phi~*Phi~ x via product coefficients (Section IV-C)."""
+    """Sharded Phi~*Phi~ x via product coefficients (Section IV-C).
+    x: (..., n_padded) -> (..., n_padded)."""
     d = jnp.asarray(cheb.gram_coeffs(coeffs), dtype=x.dtype)
 
     def run(rows, xl, d):
@@ -93,7 +103,8 @@ def dist_cheb_apply_gram_allgather(
         return cheb.cheb_apply(mv, xl, d, lmax)
 
     return _sharded(
-        run, mesh, (P(axis, None), P(axis), P()), P(axis)
+        run, mesh, (P(axis, None), _vspec(x.ndim, axis), P()),
+        _vspec(x.ndim, axis)
     )(P_dense, x, d)
 
 
@@ -120,21 +131,20 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
     lmax = op.lmax
 
     def _pad(x: Array) -> Array:
-        widths = [(0, 0)] * (x.ndim - 1) + [(0, total - x.shape[-1])]
-        return jnp.pad(x, widths)
+        return pad_trailing(x, total)
 
     def apply(f: Array) -> Array:
         c2 = jnp.atleast_2d(jnp.asarray(coeffs, f.dtype))
         return dist_cheb_apply_allgather(mesh, Pp, _pad(f), c2, lmax,
-                                         axis)[:, :n]
+                                         axis)[..., :n]
 
     def apply_adjoint(a: Array) -> Array:
         return dist_cheb_apply_adjoint_allgather(mesh, Pp, _pad(a), coeffs,
-                                                 lmax, axis)[:n]
+                                                 lmax, axis)[..., :n]
 
     def apply_gram(f: Array) -> Array:
         return dist_cheb_apply_gram_allgather(mesh, Pp, _pad(f), coeffs,
-                                              lmax, axis)[:n]
+                                              lmax, axis)[..., :n]
 
     return ExecutionPlan(
         op=op, backend="allgather",

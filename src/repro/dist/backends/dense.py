@@ -1,8 +1,9 @@
 """'dense' execution backend: Algorithm 1/2 against P as given.
 
-P may be a dense matrix or a matvec closure; this is the single-device
+P may be a dense matrix or a matvec closure (applying P along the *last*
+axis, broadcasting over leading batch dims); this is the single-device
 reference path (what `UnionMultiplier.apply` always did) wrapped in the
-uniform ExecutionPlan signature.
+uniform ExecutionPlan signature, including the batched (..., N) contract.
 """
 from __future__ import annotations
 

@@ -108,10 +108,17 @@ def partition_banded(
 
 
 def pad_signal(x: Union[np.ndarray, Array], parts: BandedPartition) -> Array:
-    total = parts.n_padded
-    x = jnp.asarray(x)
-    pad = [(0, total - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
-    return jnp.pad(x, pad)
+    """Zero-pad the trailing (vertex) axis up to the partition's padded size;
+    leading batch / eta axes pass through untouched."""
+    from ...kernels.ops import pad_trailing
+
+    return pad_trailing(jnp.asarray(x), parts.n_padded)
+
+
+def _vspec(ndim: int, axis: str) -> P:
+    """PartitionSpec sharding only the last of `ndim` axes on `axis` —
+    batch / eta axes replicate, the vertex axis splits across shards."""
+    return P(*((None,) * (ndim - 1) + (axis,)))
 
 
 # ---------------------------------------------------------------------------
@@ -162,8 +169,10 @@ def dist_cheb_apply(
     lmax: float,
     axis: str = "graph",
 ) -> Array:
-    """Sharded Phi_tilde x (Algorithm 1). x: (n_padded,). Returns
-    (eta, n_padded) (or (n_padded,) for 1-D coeffs)."""
+    """Sharded Phi_tilde x (Algorithm 1). x: (..., n_padded) — leading batch
+    dims ride the same K halo-exchange rounds ((B, nl) boundary tiles move
+    per ppermute, round count unchanged). Returns (..., eta, n_padded) (or
+    (..., n_padded) for 1-D coeffs)."""
     single = getattr(coeffs, "ndim", None) == 1 or (
         not hasattr(coeffs, "ndim") and np.asarray(coeffs).ndim == 1)
     c = jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype))
@@ -171,8 +180,8 @@ def dist_cheb_apply(
     @partial(
         shard_map,
         mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P()),
-        out_specs=P(None, axis),
+        in_specs=(P(axis), P(axis), P(axis), _vspec(x.ndim, axis), P()),
+        out_specs=_vspec(x.ndim + 1, axis),
         check_vma=False,
     )
     def run(diag, left, right, xl, c):
@@ -180,7 +189,7 @@ def dist_cheb_apply(
         return cheb.cheb_apply(mv, xl, c, lmax)
 
     out = run(parts.diag, parts.left, parts.right, x, c)
-    return out[0] if single else out
+    return out[..., 0, :] if single else out
 
 
 def dist_cheb_apply_adjoint(
@@ -191,17 +200,19 @@ def dist_cheb_apply_adjoint(
     lmax: float,
     axis: str = "graph",
 ) -> Array:
-    """Sharded Phi_tilde^* a (Algorithm 2). a: (eta, n_padded)."""
+    """Sharded Phi_tilde^* a (Algorithm 2). a: (..., eta, n_padded) ->
+    (..., n_padded); one ppermute pair moves all eta streams (and every
+    batch signal) per order."""
     c = jnp.asarray(coeffs, dtype=a.dtype)
 
     def run(diag, left, right, al, c):
         mv = _halo_matvec(diag[0], left[0], right[0], axis)
-        return cheb.cheb_apply_adjoint(mv, al, c, lmax, matvec_batched=mv)
+        return cheb.cheb_apply_adjoint(mv, al, c, lmax)
 
     return _sharded(
         run, mesh,
-        (P(axis), P(axis), P(axis), P(None, axis), P()),
-        P(axis),
+        (P(axis), P(axis), P(axis), _vspec(a.ndim, axis), P()),
+        _vspec(a.ndim - 1, axis),
     )(parts.diag, parts.left, parts.right, a, c)
 
 
@@ -213,7 +224,8 @@ def dist_cheb_apply_gram(
     lmax: float,
     axis: str = "graph",
 ) -> Array:
-    """Sharded Phi~*Phi~ x via product coefficients (Section IV-C)."""
+    """Sharded Phi~*Phi~ x via product coefficients (Section IV-C).
+    x: (..., n_padded) -> (..., n_padded)."""
     d = jnp.asarray(cheb.gram_coeffs(coeffs), dtype=x.dtype)
 
     def run(diag, left, right, xl, d):
@@ -222,8 +234,8 @@ def dist_cheb_apply_gram(
 
     return _sharded(
         run, mesh,
-        (P(axis), P(axis), P(axis), P(axis), P()),
-        P(axis),
+        (P(axis), P(axis), P(axis), _vspec(x.ndim, axis), P()),
+        _vspec(x.ndim, axis),
     )(parts.diag, parts.left, parts.right, x, d)
 
 
@@ -240,38 +252,41 @@ def dist_lasso(
 ) -> Tuple[Array, Array]:
     """Fully sharded Algorithm 3 (distributed lasso).
 
-    y: (n_padded,); mu: (eta,) per-scale weights. Returns (a_*, y_*) with
-    a_*: (eta, n_padded) wavelet coefficients, y_*: (n_padded,) denoised
-    signal. The entire ISTA loop lives inside one shard_map — per soft-
-    thresholding iteration, the only communication is the 4K halo exchanges
-    of Phi~ Phi~* (Section VI's communication analysis).
+    y: (..., n_padded) — batched signals share every exchange round; mu:
+    scalar, (eta,) per-scale weights, or (..., eta) per-signal weights.
+    Returns (a_*, y_*) with a_*: (..., eta, n_padded) wavelet coefficients,
+    y_*: (..., n_padded) denoised signals. The entire ISTA loop lives
+    inside one shard_map — per soft-thresholding iteration, the only
+    communication is the 4K halo exchanges of Phi~ Phi~* (Section VI's
+    communication analysis), regardless of batch size.
     """
-    c = jnp.asarray(coeffs, dtype=y.dtype)
-    mu_arr = jnp.asarray(mu, dtype=y.dtype)
+    from ...core.lasso import _mu_threshold
 
-    def run(diag, left, right, yl, c, mu_arr):
+    c = jnp.asarray(coeffs, dtype=y.dtype)
+    eta = c.shape[0]
+    thresh = _mu_threshold(mu, eta, y.dtype, gamma)
+
+    def run(diag, left, right, yl, c, thresh):
         mv = _halo_matvec(diag[0], left[0], right[0], axis)
         phi_y = cheb.cheb_apply(mv, yl, c, lmax)  # Alg. 3 line 3
-        thresh = mu_arr[:, None] * gamma
 
         def body(a, _):
             gram_a = cheb.cheb_apply(
-                mv, cheb.cheb_apply_adjoint(mv, a, c, lmax, matvec_batched=mv),
-                c, lmax,
+                mv, cheb.cheb_apply_adjoint(mv, a, c, lmax), c, lmax,
             )
             a_new = soft_threshold(a + gamma * (phi_y - gram_a), thresh)
             return a_new, None
 
         a0 = jnp.zeros_like(phi_y)
         a_star, _ = jax.lax.scan(body, a0, None, length=n_iters)
-        y_star = cheb.cheb_apply_adjoint(mv, a_star, c, lmax, matvec_batched=mv)
+        y_star = cheb.cheb_apply_adjoint(mv, a_star, c, lmax)
         return a_star, y_star
 
     return _sharded(
         run, mesh,
-        (P(axis), P(axis), P(axis), P(axis), P(), P()),
-        (P(None, axis), P(axis)),
-    )(parts.diag, parts.left, parts.right, y, c, mu_arr)
+        (P(axis), P(axis), P(axis), _vspec(y.ndim, axis), P(), P()),
+        (_vspec(y.ndim + 1, axis), _vspec(y.ndim, axis)),
+    )(parts.diag, parts.left, parts.right, y, c, thresh)
 
 
 def halo_bytes_per_apply(parts: BandedPartition, K: int, eta: int = 1,
@@ -321,16 +336,15 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
         out = dist_cheb_apply(mesh, parts, pad_signal(f, parts),
                               jnp.atleast_2d(jnp.asarray(coeffs, f.dtype)),
                               lmax, axis)
-        return out[:, :n]
+        return out[..., :n]
 
     def apply_adjoint(a: Array) -> Array:
-        apad = jnp.pad(a, ((0, 0), (0, parts.n_padded - a.shape[1])))
-        return dist_cheb_apply_adjoint(mesh, parts, apad, coeffs, lmax,
-                                       axis)[:n]
+        return dist_cheb_apply_adjoint(mesh, parts, pad_signal(a, parts),
+                                       coeffs, lmax, axis)[..., :n]
 
     def apply_gram(f: Array) -> Array:
         return dist_cheb_apply_gram(mesh, parts, pad_signal(f, parts),
-                                    coeffs, lmax, axis)[:n]
+                                    coeffs, lmax, axis)[..., :n]
 
     def solve_lasso(y, mu, gamma, n_iters):
         from ...core.lasso import LassoResult
@@ -338,8 +352,8 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
         a_star, y_star = dist_lasso(mesh, parts, pad_signal(y, parts),
                                     coeffs, lmax, mu, gamma=gamma,
                                     n_iters=n_iters, axis=axis)
-        return LassoResult(coeffs=a_star[:, :n], signal=y_star[:n],
-                           objective=jnp.nan, n_iters=n_iters)
+        return LassoResult(coeffs=a_star[..., :n], signal=y_star[..., :n],
+                           objective=jnp.nan, n_iters=n_iters, fused=True)
 
     return ExecutionPlan(
         op=op, backend="halo",

@@ -4,7 +4,9 @@ Converts the dense P once into the Block-ELL layout at plan time, then every
 application runs the fused recurrence (`kernels.ops.fused_cheb_apply`) — the
 hot path on TPU, interpret mode on CPU.  Signals are padded to the Block-ELL
 padded size internally and the padding is stripped from every output, so
-callers see the logical N everywhere.
+callers see the logical N everywhere.  Batched (..., N) signals hit the
+batched SpMV tile path: every Block-ELL block load is amortized across the
+batch, so B signals cost one structure sweep per order, not B.
 """
 from __future__ import annotations
 
@@ -38,32 +40,29 @@ def build(op, *, mesh=None, partition=None, block: Tuple[int, int] = (8, 128),
     lmax = op.lmax
 
     def _pad(x: Array) -> Array:
-        widths = [(0, 0)] * (x.ndim - 1) + [(0, total - x.shape[-1])]
-        return jnp.pad(x, widths)
+        return ops.pad_trailing(x, total)
 
     def _mv(t: Array) -> Array:
+        # batched Block-ELL SpMV: leading dims (batch, eta streams, ...)
+        # ride one sweep of the sparsity structure
         return ops.spmv(A, t, use_pallas=use_pallas)
-
-    def _mv_batched(t: Array) -> Array:
-        return jax.vmap(_mv)(t)
 
     def apply(f: Array) -> Array:
         c2 = np.atleast_2d(np.asarray(coeffs))
         out = ops.fused_cheb_apply(A, _pad(f), c2, lmax,
                                    use_pallas=use_pallas)
-        return out[:, :n]
+        return out[..., :n]
 
     def apply_adjoint(a: Array) -> Array:
         out = cheb.cheb_apply_adjoint(_mv, _pad(a),
-                                      jnp.asarray(coeffs, a.dtype), lmax,
-                                      matvec_batched=_mv_batched)
-        return out[:n]
+                                      jnp.asarray(coeffs, a.dtype), lmax)
+        return out[..., :n]
 
     def apply_gram(f: Array) -> Array:
         d = cheb.gram_coeffs(coeffs)
         out = ops.fused_cheb_apply(A, _pad(f), d[None], lmax,
                                    use_pallas=use_pallas)
-        return out[0, :n]
+        return out[..., 0, :n]
 
     nnz_blocks = int(np.asarray(A.mask).sum()) if hasattr(A, "mask") else None
     return ExecutionPlan(

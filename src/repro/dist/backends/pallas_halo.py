@@ -28,9 +28,10 @@ Pallas SpMV kernel; `L_s`/`R_s` are the (nl, h) boundary couplings applied
 as small dense matmuls to the halo rows received from the ring neighbours.
 
 Communication per application: K orders x 2 ppermutes of an (h,)-block
-(forward/gram; (eta, h) for the adjoint) — measurable with
-:mod:`repro.dist.commstats` and compared against the paper's closed form in
-``benchmarks/bench_scaling.py``.
+(forward/gram; (eta, h) for the adjoint; (..., h) tiles for batched
+signals — the round count is batch-invariant, only the tile grows) —
+measurable with :mod:`repro.dist.commstats` and compared against the
+paper's closed form in ``benchmarks/bench_scaling.py``.
 """
 from __future__ import annotations
 
@@ -166,18 +167,19 @@ def _halo_row_matvec(local_A: graphmod.BlockELL, left: Array, right: Array,
     """Matvec along the last axis of x with a boundary-rows-only exchange.
 
     x: (..., nl) local block.  Per call each shard ppermutes its first/last
-    h entries to its ring neighbours (the only inter-shard traffic), runs
-    the Pallas Block-ELL SpMV on its diagonal block, and applies the small
-    dense boundary couplings to the received halo rows.  The ring wraps;
-    the first/last shard's out-of-range contribution is killed by the zero
-    left/right coupling blocks.
+    h entries to its ring neighbours (the only inter-shard traffic — a
+    (..., h) boundary tile, so B batched signals ship (B, h) per direction
+    in the *same* exchange round), runs the Pallas Block-ELL SpMV on its
+    diagonal block (batched tile path: one structure sweep for the whole
+    batch), and applies the small dense boundary couplings to the received
+    halo rows.  The ring wraps; the first/last shard's out-of-range
+    contribution is killed by the zero left/right coupling blocks.
     """
     size = jax.lax.axis_size(axis)
-    pad = local_A.padded_n - nl
 
     def local_mv(v: Array) -> Array:
-        return ops.spmv(local_A, jnp.pad(v, (0, pad)),
-                        use_pallas=use_pallas)[:nl]
+        vp = ops.pad_trailing(v, local_A.padded_n)
+        return ops.spmv(local_A, vp, use_pallas=use_pallas)[..., :nl]
 
     def mv(x: Array) -> Array:
         head = x[..., :h]
@@ -191,7 +193,7 @@ def _halo_row_matvec(local_A: graphmod.BlockELL, left: Array, right: Array,
                 head, axis, perm=[(i, (i - 1) % size) for i in range(size)])
         else:
             from_left, from_right = tail, head
-        y = local_mv(x) if x.ndim == 1 else jax.vmap(local_mv)(x)
+        y = local_mv(x)
         y = y + jnp.einsum("ij,...j->...i", left, from_left)
         y = y + jnp.einsum("ij,...j->...i", right, from_right)
         return y
@@ -263,12 +265,17 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
     # PartitionSpecs through the logical-axis rules: every per-shard tensor
     # is sharded on its leading "vertex"-block dimension.  The shared _BASE
     # vocabulary maps "vertex" to the conventional "graph" mesh axis; a
-    # mesh with a differently-named axis gets a local override.
+    # mesh with a differently-named axis gets a local override.  Signals
+    # carry leading batch dims ((..., N) contract), so their specs are
+    # built per input rank: batch/eta axes replicate, vertex axis shards.
     rules = (make_rules(mesh) if axis == "graph"
              else ShardingRules(mapping={"vertex": axis}, mesh=mesh))
     vspec = rules.spec("vertex")
     mats = (parts.blocks, parts.indices, parts.mask, parts.left, parts.right)
     mat_specs = (vspec,) * 5
+
+    def _sig_spec(ndim: int) -> P:
+        return rules.spec(*([None] * (ndim - 1)), "vertex")
 
     def apply(f: Array) -> Array:
         def run(blocks, indices, mask, left, right, xl, c):
@@ -277,46 +284,43 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
                                              use_pallas=use_pallas)
 
         c2 = jnp.atleast_2d(jnp.asarray(coeffs, f.dtype))
-        out = _sharded(run, mesh, mat_specs + (vspec, P()),
-                       rules.spec(None, "vertex"))(*mats,
-                                                   pad_signal(f, parts),
-                                                   c2)
-        return out[:, :n]
+        out = _sharded(run, mesh, mat_specs + (_sig_spec(f.ndim), P()),
+                       _sig_spec(f.ndim + 1))(*mats,
+                                              pad_signal(f, parts),
+                                              c2)
+        return out[..., :n]
 
     def apply_adjoint(a: Array) -> Array:
         def run(blocks, indices, mask, left, right, al, c):
             mv = _mk_mv(blocks, indices, mask, left, right)
-            return cheb.cheb_apply_adjoint(mv, al, c, lmax,
-                                           matvec_batched=mv)
+            return cheb.cheb_apply_adjoint(mv, al, c, lmax)
 
-        apad = jnp.pad(a, ((0, 0), (0, parts.n_padded - a.shape[1])))
         c = jnp.asarray(coeffs, a.dtype)
-        return _sharded(run, mesh, mat_specs + (rules.spec(None, "vertex"),
-                                            P()),
-                        vspec)(*mats, apad, c)[:n]
+        return _sharded(run, mesh, mat_specs + (_sig_spec(a.ndim), P()),
+                        _sig_spec(a.ndim - 1))(*mats, pad_signal(a, parts),
+                                               c)[..., :n]
 
     def apply_gram(f: Array) -> Array:
         def run(blocks, indices, mask, left, right, xl, d):
             mv = _mk_mv(blocks, indices, mask, left, right)
             return ops.fused_cheb_recurrence(mv, xl, d, lmax,
-                                             use_pallas=use_pallas)[0]
+                                             use_pallas=use_pallas)[..., 0, :]
 
         d = jnp.asarray(cheb.gram_coeffs(coeffs), f.dtype)[None]
-        return _sharded(run, mesh, mat_specs + (vspec, P()),
-                        vspec)(*mats, pad_signal(f, parts), d)[:n]
+        return _sharded(run, mesh, mat_specs + (_sig_spec(f.ndim), P()),
+                        _sig_spec(f.ndim))(*mats, pad_signal(f, parts),
+                                           d)[..., :n]
 
     def solve_lasso(y, mu, gamma, n_iters):
-        from ...core.lasso import LassoResult
+        from ...core.lasso import LassoResult, _mu_threshold
 
-        def run(blocks, indices, mask, left, right, yl, c, mu_arr):
+        def run(blocks, indices, mask, left, right, yl, c, thresh):
             mv = _mk_mv(blocks, indices, mask, left, right)
             phi_y = ops.fused_cheb_recurrence(mv, yl, c, lmax,
                                               use_pallas=use_pallas)
-            thresh = mu_arr[:, None] * gamma
 
             def body(a, _):
-                back = cheb.cheb_apply_adjoint(mv, a, c, lmax,
-                                               matvec_batched=mv)
+                back = cheb.cheb_apply_adjoint(mv, a, c, lmax)
                 gram_a = ops.fused_cheb_recurrence(mv, back, c, lmax,
                                                    use_pallas=use_pallas)
                 a_new = soft_threshold(a + gamma * (phi_y - gram_a), thresh)
@@ -324,18 +328,17 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
 
             a0 = jnp.zeros_like(phi_y)
             a_star, _ = jax.lax.scan(body, a0, None, length=n_iters)
-            y_star = cheb.cheb_apply_adjoint(mv, a_star, c, lmax,
-                                             matvec_batched=mv)
+            y_star = cheb.cheb_apply_adjoint(mv, a_star, c, lmax)
             return a_star, y_star
 
         c = jnp.asarray(coeffs, y.dtype)
-        mu_arr = jnp.asarray(mu, dtype=y.dtype)
+        thresh = _mu_threshold(mu, op.eta, y.dtype, gamma)
         a_star, y_star = _sharded(
-            run, mesh, mat_specs + (vspec, P(), P()),
-            (rules.spec(None, "vertex"), vspec),
-        )(*mats, pad_signal(y, parts), c, mu_arr)
-        return LassoResult(coeffs=a_star[:, :n], signal=y_star[:n],
-                           objective=jnp.nan, n_iters=n_iters)
+            run, mesh, mat_specs + (_sig_spec(y.ndim), P(), P()),
+            (_sig_spec(y.ndim + 1), _sig_spec(y.ndim)),
+        )(*mats, pad_signal(y, parts), c, thresh)
+        return LassoResult(coeffs=a_star[..., :n], signal=y_star[..., :n],
+                           objective=jnp.nan, n_iters=n_iters, fused=True)
 
     return ExecutionPlan(
         op=op, backend="pallas_halo",

@@ -24,7 +24,11 @@ what a compiled plan actually does instead of trusting the closed form:
         equals the ``2K|E|`` prediction of
         :meth:`repro.core.multiplier.UnionMultiplier.message_counts`.
   * :func:`plan_comm_stats` runs the measurement over a plan's
-    apply / apply_adjoint / apply_gram in one call.
+    apply / apply_adjoint / apply_gram in one call; ``batch=B`` traces the
+    batched (B, N) signatures of the (..., N) contract, and
+    :meth:`CommStats.paper_messages_per_signal` reports the amortized
+    2K|E|/B count (total rounds are batch-invariant —
+    :func:`verify_message_scaling` asserts it).
 
 ``benchmarks/bench_scaling.py`` sweeps this over growing sensor graphs to
 emit the communication-vs-network-size curve, and
@@ -70,10 +74,18 @@ class CollectiveCall:
 
 @dataclasses.dataclass(frozen=True)
 class CommStats:
-    """Measured communication of one traced function (one plan method)."""
+    """Measured communication of one traced function (one plan method).
+
+    `batch` is the number of signals the traced call processed at once
+    (the leading batch size of the (..., N) contract); exchange *rounds*
+    are batch-invariant — the recurrence is linear, so B signals share the
+    K rounds — and the per-signal accessors divide the paper-level message
+    count by `batch` to expose the amortization (2K|E|/B per signal).
+    """
 
     collectives: Tuple[CollectiveCall, ...]
     n_shards: int
+    batch: int = 1
 
     @property
     def n_collectives(self) -> int:
@@ -110,13 +122,25 @@ class CommStats:
         In the paper's fully distributed model every matvec (= exchange
         round) moves one scalar along each *directed* edge, so a plan that
         really implements Algorithm 1 at order K measures exactly the
-        predicted ``2K|E|`` of `op.message_counts(n_edges)`.
+        predicted ``2K|E|`` of `op.message_counts(n_edges)`.  This is the
+        *total* for the whole batched application; see
+        :meth:`paper_messages_per_signal` for the amortized view.
         """
         return self.exchange_rounds * 2 * n_edges
+
+    def paper_messages_per_signal(self, n_edges: int) -> float:
+        """Amortized message count per signal: 2K|E| / batch.
+
+        The batch shares the K rounds, so B-batched execution costs each
+        signal a 1/B share of the paper's message bound — the quantity
+        :func:`verify_message_scaling` asserts against the closed form.
+        """
+        return self.paper_messages(n_edges) / self.batch
 
     def summary(self) -> Dict[str, Any]:
         return {
             "n_shards": self.n_shards,
+            "batch": self.batch,
             "n_collectives": self.n_collectives,
             "exchange_rounds": self.exchange_rounds,
             "bytes_per_shard": self.bytes_per_shard,
@@ -173,12 +197,15 @@ def _walk(jaxpr, mult: int, tally: Dict[Tuple[str, int, int], int]) -> None:
 # ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
-def measure(fn: Callable, *example_args, n_shards: int = 1) -> CommStats:
+def measure(fn: Callable, *example_args, n_shards: int = 1,
+            batch: int = 1) -> CommStats:
     """Trace `fn` on example arguments and tally its collectives.
 
     `example_args` may be concrete arrays or `jax.ShapeDtypeStruct`s —
     tracing is abstract, nothing is executed on devices.  `n_shards` scales
-    the per-shard byte counts to mesh totals (pass the plan's shard count).
+    the per-shard byte counts to mesh totals (pass the plan's shard count);
+    `batch` records how many signals the traced call carries so the
+    per-signal accessors can amortize.
     """
     jaxpr = jax.make_jaxpr(fn)(*example_args)
     tally: Dict[Tuple[str, int, int], int] = {}
@@ -186,14 +213,17 @@ def measure(fn: Callable, *example_args, n_shards: int = 1) -> CommStats:
     calls = tuple(
         CollectiveCall(primitive=k[0], count=v, elems=k[1], nbytes=k[2])
         for k, v in sorted(tally.items()))
-    return CommStats(collectives=calls, n_shards=n_shards)
+    return CommStats(collectives=calls, n_shards=n_shards, batch=batch)
 
 
-def plan_comm_stats(plan, n: int = None) -> Dict[str, CommStats]:
+def plan_comm_stats(plan, n: int = None, batch: int = None) -> Dict[str, CommStats]:
     """Measure a plan's apply / apply_adjoint / apply_gram communication.
 
     `n` (logical signal size) defaults to the operator's dense-P dimension;
-    pass it explicitly for closure-P operators.  Returns
+    pass it explicitly for closure-P operators.  `batch=None` traces the
+    unbatched (N,) signatures; `batch=B` traces (B, N) / (B, eta, N) ones
+    (the (..., N) contract) and stamps B on the returned stats so
+    `paper_messages_per_signal` reports the 2K|E|/B amortization.  Returns
     ``{"apply": CommStats, "apply_adjoint": ..., "apply_gram": ...}``.
     """
     op = plan.op
@@ -202,16 +232,20 @@ def plan_comm_stats(plan, n: int = None) -> Dict[str, CommStats]:
             raise ValueError("plan_comm_stats needs n= for a closure P")
         n = int(np.asarray(op.P).shape[0])
     shards = int(plan.info.get("n_shards", 1))
-    f = jax.ShapeDtypeStruct((n,), np.float32)
-    a = jax.ShapeDtypeStruct((op.eta, n), np.float32)
+    lead = () if batch is None else (int(batch),)
+    b = 1 if batch is None else int(batch)
+    f = jax.ShapeDtypeStruct(lead + (n,), np.float32)
+    a = jax.ShapeDtypeStruct(lead + (op.eta, n), np.float32)
     return {
-        "apply": measure(plan.apply, f, n_shards=shards),
-        "apply_adjoint": measure(plan.apply_adjoint, a, n_shards=shards),
-        "apply_gram": measure(plan.apply_gram, f, n_shards=shards),
+        "apply": measure(plan.apply, f, n_shards=shards, batch=b),
+        "apply_adjoint": measure(plan.apply_adjoint, a, n_shards=shards,
+                                 batch=b),
+        "apply_gram": measure(plan.apply_gram, f, n_shards=shards, batch=b),
     }
 
 
-def verify_message_scaling(plan, n_edges: int, n: int = None) -> Dict[str, Any]:
+def verify_message_scaling(plan, n_edges: int, n: int = None,
+                           batch: int = None) -> Dict[str, Any]:
     """Measured-vs-predicted message counts for one plan.
 
     Compares :meth:`CommStats.paper_messages` for each plan method against
@@ -219,6 +253,13 @@ def verify_message_scaling(plan, n_edges: int, n: int = None) -> Dict[str, Any]:
     adjoint, 4K|E| gram).  Returns a dict with measured, predicted and the
     max relative deviation — the quantity `bench_scaling.py` asserts is
     within 10%.
+
+    With `batch=B` the batched signatures are traced as well and the
+    exchange-round counts are *asserted* batch-invariant (the tentpole
+    claim: B signals share the K rounds, so per-signal messages are
+    2K|E|/B).  The result then carries ``batch``, ``measured_batched``
+    (total rounds at B — must equal the unbatched totals) and
+    ``per_signal_messages`` (the amortized counts).
     """
     stats = plan_comm_stats(plan, n=n)
     predicted = plan.op.message_counts(n_edges)
@@ -232,10 +273,27 @@ def verify_message_scaling(plan, n_edges: int, n: int = None) -> Dict[str, Any]:
         k: (abs(meas[k] - pred[k]) / pred[k]) if pred[k] else 0.0
         for k in pred
     }
-    return {
+    out = {
         "measured": meas,
         "predicted": pred,
         "rel_dev": rel,
         "max_rel_dev": max(rel.values()),
         "stats": {k: s.summary() for k, s in stats.items()},
     }
+    if batch is not None:
+        bstats = plan_comm_stats(plan, n=n, batch=batch)
+        for k in stats:
+            r1, rb = stats[k].exchange_rounds, bstats[k].exchange_rounds
+            if r1 != rb:
+                raise AssertionError(
+                    f"{plan.backend}.{k}: exchange rounds are not batch-"
+                    f"invariant ({r1} at B=1 vs {rb} at B={batch}) — the "
+                    "batched path is re-running the recurrence per signal")
+        out["batch"] = int(batch)
+        out["measured_batched"] = {
+            k: s.paper_messages(n_edges) for k, s in bstats.items()}
+        out["per_signal_messages"] = {
+            k: s.paper_messages_per_signal(n_edges)
+            for k, s in bstats.items()}
+        out["stats_batched"] = {k: s.summary() for k, s in bstats.items()}
+    return out

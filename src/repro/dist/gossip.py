@@ -167,6 +167,11 @@ def gossip_mean(x: Array, axis: str, coeffs, *, quantize: bool = False,
     mv = _ring_matvec(axis, quantize=quantize,
                       drop_left=drop_left, drop_right=drop_right)
     c = jnp.asarray(np.asarray(coeffs), x.dtype)
+    x = jnp.asarray(x)
+    if x.ndim == 0:
+        # cheb_apply's (..., N) contract needs a trailing axis; the ring
+        # "graph" lives on the device axis, so a scalar leaf is a 1-vector
+        return cheb.cheb_apply(mv, x[None], c, RING_LMAX)[0]
     return cheb.cheb_apply(mv, x, c, RING_LMAX)
 
 

@@ -6,19 +6,24 @@ the execution strategy:
 
     op = GraphOperator(P, multipliers, lmax=lmax, K=20)
     plan = op.plan(backend="halo", mesh=mesh)     # or dense | pallas | allgather
-    out  = plan.apply(f)            # Phi~ f          (eta, N)
-    sig  = plan.apply_adjoint(out)  # Phi~* a         (N,)
-    gr   = plan.apply_gram(f)       # Phi~* Phi~ f    (N,)
-    res  = plan.solve_lasso(y, mu)  # Algorithm 3
+    out  = plan.apply(f)            # Phi~ f          (..., N) -> (..., eta, N)
+    sig  = plan.apply_adjoint(out)  # Phi~* a         (..., eta, N) -> (..., N)
+    gr   = plan.apply_gram(f)       # Phi~* Phi~ f    (..., N) -> (..., N)
+    res  = plan.solve_lasso(y, mu)  # Algorithm 3     (..., N) signals
 
-Every backend honours the same signatures and the same logical sizes —
-padding (Block-ELL tiles, shard grids) is a backend detail, applied on the
-way in and stripped on the way out.  New strategies register through
-:mod:`repro.dist.backends` without touching any caller.
+Signals are ``(..., N)``: leading axes are batch signals, and because the
+Chebyshev recurrence is linear every batch signal rides the *same* K
+communication rounds (Section III-D's shared-rounds trick as a first-class
+contract — B signals cost one sweep, not B).  Every backend honours the
+same signatures and the same logical sizes — padding (Block-ELL tiles,
+shard grids) is a backend detail, applied on the way in and stripped on
+the way out.  New strategies register through :mod:`repro.dist.backends`
+without touching any caller.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -26,6 +31,8 @@ import jax
 from ..core.multiplier import UnionMultiplier
 
 Array = jax.Array
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,18 +81,44 @@ class ExecutionPlan:
                     n_iters: int = 300, **kwargs):
         """Distributed wavelet lasso (Section VI) under this plan's backend.
 
-        Backends that can fuse the whole ISTA loop (halo: one shard_map)
-        override the generic path.  The fused path takes no extra loop
-        knobs, so any kwargs (a0, record_objective, soft_threshold_fn, ...)
-        route to the generic ISTA over this plan's apply/apply_adjoint
-        instead of being dropped.
+        y: (..., N) — batched signals share every exchange round; mu:
+        scalar, (eta,) per-scale, or (..., eta) per-signal weights.
+
+        Backends that can fuse the whole ISTA loop (halo / pallas_halo: one
+        shard_map) override the generic path.  The fused path takes no
+        extra loop knobs, so kwargs that *change* the loop (a0,
+        record_objective, soft_threshold_fn, ...) route to the generic ISTA
+        over this plan's apply/apply_adjoint instead of being dropped —
+        kwargs explicitly passed at their default values are benign and do
+        NOT forfeit fusion.  Every forfeit is logged (INFO) with the
+        offending kwargs, and `LassoResult.fused` records which path ran,
+        so benchmarks can't silently misattribute the slow path.
         """
+        import jax.numpy as jnp
+
         from ..core import lasso as _lasso
 
         if gamma is None:
             gamma = _lasso.ista_step_size(self.op)
-        if self.solve_lasso_fn is not None and not kwargs:
-            return self.solve_lasso_fn(y, mu, gamma, n_iters)
+        if self.solve_lasso_fn is not None:
+            # drop benign kwargs (== the generic-ISTA defaults); only
+            # genuinely loop-changing kwargs forfeit the fused path
+            benign = {"a0": None, "record_objective": False,
+                      "soft_threshold_fn": _lasso.soft_threshold}
+            blocking = {k: v for k, v in kwargs.items()
+                        if not (k in benign and v is benign[k])}
+            # per-vertex mu ((..., eta, N): trailing axis is N, not eta)
+            # also runs the generic loop — the fused backends thresh on the
+            # padded shard domain and take scalar/(eta,)/(..., eta) only
+            mu_arr = jnp.asarray(mu)
+            if mu_arr.ndim >= 2 and mu_arr.shape[-1] != self.op.eta:
+                blocking["mu"] = f"per-vertex, shape {mu_arr.shape}"
+            if not blocking:
+                return self.solve_lasso_fn(y, mu, gamma, n_iters)
+            logger.info(
+                "solve_lasso[%s]: %s forfeit the fused in-shard_map "
+                "ISTA; running the generic (unfused) loop",
+                self.backend, sorted(blocking))
         return _lasso.distributed_lasso(self, y, mu=mu, gamma=gamma,
                                         n_iters=n_iters, **kwargs)
 
@@ -96,12 +129,13 @@ class GraphOperator(UnionMultiplier):
 
     Construction computes the truncated shifted-Chebyshev coefficients once
     (Eq. (14)); `.plan(backend=...)` binds an execution strategy.  Uniform
-    plan signatures across all backends:
+    plan signatures across all backends (leading `...` = batch signals
+    sharing the K communication rounds):
 
-        plan.apply(f)          f: (N,)      ->  (eta, N)
-        plan.apply_adjoint(a)  a: (eta, N)  ->  (N,)
-        plan.apply_gram(f)     f: (N,)      ->  (N,)
-        plan.solve_lasso(y, mu, ...)        ->  LassoResult
+        plan.apply(f)          f: (..., N)      ->  (..., eta, N)
+        plan.apply_adjoint(a)  a: (..., eta, N) ->  (..., N)
+        plan.apply_gram(f)     f: (..., N)      ->  (..., N)
+        plan.solve_lasso(y, mu, ...)            ->  LassoResult (batched)
 
     GraphOperator also keeps every UnionMultiplier method (`apply`,
     `exact_apply`, `error_bound`, ...), so it is a drop-in replacement —

@@ -10,6 +10,13 @@ Grid: (n_row_blocks, max_slots); the slot axis is innermost so the output
 row block is revisited and accumulated in VMEM. Column-block indices are
 scalar-prefetched so the x BlockSpec can gather the right 128-slice of x
 from HBM per slot.
+
+Batched path (`block_ell_spmv_batched`): the (..., N) signal contract makes
+B signals ride one sweep of the sparsity structure — the iterate is laid
+out (ncb, bc, B) so each slot performs a single (br, bc) x (bc, B) MXU
+product, amortizing every Block-ELL block load (and every index gather)
+across the whole batch instead of re-walking the structure per signal as a
+`jax.vmap` of the vector kernel would.
 """
 from __future__ import annotations
 
@@ -71,3 +78,58 @@ def block_ell_spmv(
         interpret=interpret,
     )(indices, blocks, x2)
     return out.reshape(nrb * br)
+
+
+def _spmv_kernel_batched(idx_ref, blocks_ref, x_ref, y_ref):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    blk = blocks_ref[0, 0]          # (br, bc)
+    xb = x_ref[0]                   # (bc, B)
+    y_ref[0] += jnp.dot(blk, xb, preferred_element_type=jnp.float32).astype(
+        y_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_ell_spmv_batched(
+    blocks: Array,
+    indices: Array,
+    x: Array,
+    *,
+    interpret: bool = False,
+) -> Array:
+    """Y = A @ X^T for a batch of signals, one structure sweep total.
+
+    blocks/indices as in :func:`block_ell_spmv`; x: (..., nrb_cols * bc)
+    padded signals with arbitrary leading batch dims.  Returns
+    (..., nrb * br).  Each grid step loads one (br, bc) block once and
+    multiplies it against the (bc, B) tile of all batch signals — the block
+    loads (the HBM-bound part of the sweep) are amortized over B.
+    """
+    nrb, slots, br, bc = blocks.shape
+    batch_shape = x.shape[:-1]
+    B = x.size // x.shape[-1]
+    # (B, ncb, bc) -> (ncb, bc, B): batch innermost so every slot is one
+    # MXU-shaped (br, bc) x (bc, B) product
+    xt = x.reshape(B, -1, bc).transpose(1, 2, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nrb, slots),
+        in_specs=[
+            pl.BlockSpec((1, 1, br, bc), lambda i, s, idx: (i, s, 0, 0)),
+            pl.BlockSpec((1, bc, B), lambda i, s, idx: (idx[i, s], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, br, B), lambda i, s, idx: (i, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _spmv_kernel_batched,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrb, br, B), x.dtype),
+        interpret=interpret,
+    )(indices, blocks, xt)
+    return out.transpose(2, 0, 1).reshape(batch_shape + (nrb * br,))

@@ -14,6 +14,11 @@ Halo-aware tiling: the kernel is also the per-shard recurrence step of the
 local block (size nl, generally *not* a 128 multiple).  The internal
 zero-pad-to-128 below is what makes the same tiling serve both the global
 (padded_n) and the per-shard (nl) iterate shapes.
+
+Batched iterates ((..., n) under the repo-wide (..., N) signal contract)
+take a second tile path with grid (B, n/blk): one kernel launch advances
+every batch signal one Chebyshev order, keeping the per-order HBM traffic
+at one round-trip for the whole batch.
 """
 from __future__ import annotations
 
@@ -43,13 +48,13 @@ def pick_block(n: int, maximum: int = _BLOCK) -> int:
 
 def _cheb_step_kernel(coef_ref, pt_ref, t1_ref, t2_ref, acc_ref,
                       tk_out_ref, acc_out_ref, *, two_over_alpha):
-    pt = pt_ref[...]
-    t1 = t1_ref[...]
-    t2 = t2_ref[...]
+    pt = pt_ref[0]                  # (block,) — one signal's tile
+    t1 = t1_ref[0]
+    t2 = t2_ref[0]
     tk = two_over_alpha * pt - 2.0 * t1 - t2
-    tk_out_ref[...] = tk
+    tk_out_ref[0] = tk
     # coef_ref: (eta, 1) broadcast against tk (block,)
-    acc_out_ref[...] = acc_ref[...] + coef_ref[...] * tk[None, :]
+    acc_out_ref[0] = acc_ref[0] + coef_ref[...] * tk[None, :]
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "interpret"))
@@ -65,43 +70,52 @@ def cheb_step(
 ):
     """Returns (t_k, acc + outer(coef, t_k)).
 
-    pt, t_km1, t_km2: (n,) — any n; iterates are zero-padded to a multiple
-    of the 128 lane width for tiling and the padding is stripped from both
-    outputs.  acc: (eta, n); coef: (eta,).
+    pt, t_km1, t_km2: (..., n) — any n; iterates are zero-padded to a
+    multiple of the 128 lane width for tiling and the padding is stripped
+    from both outputs.  acc: (..., eta, n); coef: (eta,).  Leading batch
+    dims take the batched tile path (grid over (B, n/blk)) so the whole
+    batch advances one Chebyshev order in a single kernel launch.
     """
-    n_logical = pt.shape[0]
+    n_logical = pt.shape[-1]
     pad = (-n_logical) % 128
     if pad:
-        pt = jnp.pad(pt, (0, pad))
-        t_km1 = jnp.pad(t_km1, (0, pad))
-        t_km2 = jnp.pad(t_km2, (0, pad))
-        acc = jnp.pad(acc, ((0, 0), (0, pad)))
-    n = pt.shape[0]
-    eta = acc.shape[0]
+        widths = [(0, 0)] * (pt.ndim - 1) + [(0, pad)]
+        pt = jnp.pad(pt, widths)
+        t_km1 = jnp.pad(t_km1, widths)
+        t_km2 = jnp.pad(t_km2, widths)
+        acc = jnp.pad(acc, [(0, 0)] * (acc.ndim - 1) + [(0, pad)])
+    n = pt.shape[-1]
+    eta = acc.shape[-2]
     blk = pick_block(n)
-    grid = (n // blk,)
+    # one tile path for every rank: leading dims flatten to a batch axis
+    # (B=1 for the classic 1-D iterate), grid over (B, tiles)
+    batch_shape = pt.shape[:-1]
+    B = pt.size // n
+    pt3 = pt.reshape(B, n)
+    t13 = t_km1.reshape(B, n)
+    t23 = t_km2.reshape(B, n)
+    acc3 = acc.reshape(B, eta, n)
     kernel = functools.partial(_cheb_step_kernel, two_over_alpha=2.0 / alpha)
     tk, acc_out = pl.pallas_call(
         kernel,
-        grid=grid,
+        grid=(B, n // blk),
         in_specs=[
-            pl.BlockSpec((eta, 1), lambda i: (0, 0)),
-            pl.BlockSpec((blk,), lambda i: (i,)),
-            pl.BlockSpec((blk,), lambda i: (i,)),
-            pl.BlockSpec((blk,), lambda i: (i,)),
-            pl.BlockSpec((eta, blk), lambda i: (0, i)),
+            pl.BlockSpec((eta, 1), lambda b, i: (0, 0)),
+            pl.BlockSpec((1, blk), lambda b, i: (b, i)),
+            pl.BlockSpec((1, blk), lambda b, i: (b, i)),
+            pl.BlockSpec((1, blk), lambda b, i: (b, i)),
+            pl.BlockSpec((1, eta, blk), lambda b, i: (b, 0, i)),
         ],
         out_specs=[
-            pl.BlockSpec((blk,), lambda i: (i,)),
-            pl.BlockSpec((eta, blk), lambda i: (0, i)),
+            pl.BlockSpec((1, blk), lambda b, i: (b, i)),
+            pl.BlockSpec((1, eta, blk), lambda b, i: (b, 0, i)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n,), pt.dtype),
-            jax.ShapeDtypeStruct((eta, n), acc.dtype),
+            jax.ShapeDtypeStruct((B, n), pt.dtype),
+            jax.ShapeDtypeStruct((B, eta, n), acc.dtype),
         ],
         interpret=interpret,
-    )(coef[:, None], pt, t_km1, t_km2, acc)
-    if pad:
-        tk = tk[:n_logical]
-        acc_out = acc_out[:, :n_logical]
+    )(coef[:, None], pt3, t13, t23, acc3)
+    tk = tk[..., :n_logical].reshape(batch_shape + (n_logical,))
+    acc_out = acc_out[..., :n_logical].reshape(batch_shape + (eta, n_logical))
     return tk, acc_out

@@ -28,7 +28,7 @@ import numpy as np
 
 from ..core.graph import BlockELL
 from . import ref
-from .bcsr_spmv import block_ell_spmv
+from .bcsr_spmv import block_ell_spmv, block_ell_spmv_batched
 from .cheb_step import cheb_step
 from .flash_attention import flash_attention as _flash
 from .soft_threshold import ista_shrink
@@ -48,16 +48,21 @@ def _resolve(use_pallas: Optional[bool]):
 
 
 def spmv(A: BlockELL, x: Array, use_pallas: Optional[bool] = None) -> Array:
-    """Block-ELL y = A @ x on the padded vector (padded_n,).
+    """Block-ELL y = A @ x on padded signals (..., padded_n).
 
     The Algorithm-1 hot loop: one call per Chebyshev order, cost
     proportional to the number of non-zero blocks (the paper's O(|E|)
-    per-order cost).  `x` must already be at `A.padded_n`; use
-    `fused_cheb_apply` / the `pallas` backend if you want padding handled
-    for you.
+    per-order cost).  Leading batch dims ride one sweep of the sparsity
+    structure (`block_ell_spmv_batched`: each Block-ELL block is loaded
+    once for the whole batch, not once per signal).  `x`'s last axis must
+    already be at `A.padded_n`; use `fused_cheb_apply` / the `pallas`
+    backend if you want padding handled for you.
     """
     use, interp = _resolve(use_pallas)
     if use:
+        if x.ndim > 1:
+            return block_ell_spmv_batched(A.blocks, A.indices, x,
+                                          interpret=interp)
         return block_ell_spmv(A.blocks, A.indices, x, interpret=interp)
     return ref.block_ell_spmv_ref(A.blocks, A.indices, x)
 
@@ -73,14 +78,16 @@ def fused_cheb_recurrence(
 
     The three-term recurrence of Algorithm 1 with the per-order AXPYs fused
     into the `cheb_step` Pallas kernel (one HBM round-trip per order instead
-    of four).  `matvec` applies P to a 1-D iterate; it may contain
-    collectives — the `pallas_halo` backend passes a halo-exchanging matvec
-    and runs this whole function inside a shard_map, where `x` is the
-    per-shard block.
+    of four).  `matvec` applies P along the last axis of the iterate,
+    broadcasting over leading batch dims; it may contain collectives — the
+    `pallas_halo` backend passes a halo-exchanging matvec and runs this
+    whole function inside a shard_map, where `x` is the per-shard block.
 
-    x: (n,) — any n; `cheb_step` pads its tiles to the 128 lane width
-    internally.  coeffs: (eta, K+1) (or (K+1,), treated as eta=1).
-    Returns (eta, n).
+    x: (..., n) — any n; `cheb_step` pads its tiles to the 128 lane width
+    internally, and leading batch dims take the batched tile paths (one
+    structure sweep / kernel launch per order for the whole batch).
+    coeffs: (eta, K+1) (or (K+1,), treated as eta=1).
+    Returns (..., eta, n).
     """
     use, interp = _resolve(use_pallas)
     c = jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype))
@@ -88,11 +95,11 @@ def fused_cheb_recurrence(
     alpha = float(lmax) / 2.0
 
     t0 = x
-    acc = 0.5 * c[:, 0:1] * x[None, :]
+    acc = 0.5 * c[:, 0:1] * x[..., None, :]
     if K == 0:
         return acc
     t1 = matvec(x) / alpha - x
-    acc = acc + c[:, 1:2] * t1[None, :]
+    acc = acc + c[:, 1:2] * t1[..., None, :]
     if K == 1:
         return acc
 
@@ -119,9 +126,10 @@ def fused_cheb_apply(
 ) -> Array:
     """Phi_tilde x with the SpMV + fused-step kernels (Algorithm 1 on TPU).
 
-    x: (padded_n,) matching A's Block-ELL padding; any padded_n works (the
-    fused step kernel pads its tiles to the 128 lane width internally).
-    Returns (eta, padded_n).
+    x: (..., padded_n), last axis matching A's Block-ELL padding; any
+    padded_n works (the fused step kernel pads its tiles to the 128 lane
+    width internally) and leading batch dims share the K structure sweeps.
+    Returns (..., eta, padded_n).
     """
 
     def mv(t):
@@ -160,14 +168,27 @@ def ista_update(
 ) -> Array:
     """One fused ISTA update (Algorithm 3 line 5 + Eq. (32) shrinkage):
     ``soft_threshold(a + gamma * (phi_y - gram_a), thresh)`` in a single
-    kernel pass.  a/phi_y/gram_a: (eta, N); thresh: (eta,) or (eta, 1)."""
+    kernel pass.  a/phi_y/gram_a: (..., eta, N); thresh: (eta,) or (eta, 1)
+    or any shape broadcastable against a.  Batched inputs (ndim > 2) use
+    the elementwise jnp path — shrinkage is memory-bound either way."""
     use, interp = _resolve(use_pallas)
     if thresh.ndim == 1:
         thresh = thresh[:, None]
-    if use:
+    if use and a.ndim == 2 and thresh.shape == (a.shape[0], 1):
         return ista_shrink(a, phi_y, gram_a, thresh, gamma=gamma,
                            interpret=interp)
     return ref.ista_shrink_ref(a, phi_y, gram_a, thresh, gamma=gamma)
+
+
+def pad_trailing(x: Array, total: int) -> Array:
+    """Zero-pad the last (vertex) axis up to the absolute size `total`;
+    leading batch / eta axes pass through untouched.  The one padding
+    primitive every execution backend shares under the (..., N) contract.
+    """
+    pad = total - x.shape[-1]
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
 
 
 def pad_for_kernels(x: Array, multiple: int = 1024) -> Array:
@@ -177,8 +198,4 @@ def pad_for_kernels(x: Array, multiple: int = 1024) -> Array:
     padding from outputs; the execution backends do this internally.
     """
     n = x.shape[-1]
-    pad = (-n) % multiple
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
-    return jnp.pad(x, widths)
+    return pad_trailing(x, n + (-n) % multiple)

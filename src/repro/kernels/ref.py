@@ -9,18 +9,20 @@ Array = jax.Array
 
 def block_ell_spmv_ref(blocks: Array, indices: Array, x: Array) -> Array:
     """y = A @ x; blocks (nrb, slots, br, bc), indices (nrb, slots),
-    x (ncb*bc,). Padded slots must hold zero blocks."""
+    x (..., ncb*bc) with arbitrary leading batch dims. Padded slots must
+    hold zero blocks."""
     nrb, slots, br, bc = blocks.shape
-    xb = x.reshape(-1, bc)
-    gathered = xb[indices]  # (nrb, slots, bc)
-    y = jnp.einsum("rsij,rsj->ri", blocks, gathered)
-    return y.reshape(nrb * br)
+    xb = x.reshape(x.shape[:-1] + (-1, bc))
+    gathered = jnp.take(xb, indices, axis=-2)  # (..., nrb, slots, bc)
+    y = jnp.einsum("rsij,...rsj->...ri", blocks, gathered)
+    return y.reshape(x.shape[:-1] + (nrb * br,))
 
 
 def cheb_step_ref(pt: Array, t_km1: Array, t_km2: Array, acc: Array,
                   coef: Array, *, alpha: float):
+    """pt/t_km1/t_km2: (..., n); acc: (..., eta, n); coef: (eta,)."""
     tk = (2.0 / alpha) * pt - 2.0 * t_km1 - t_km2
-    return tk, acc + coef[:, None] * tk[None, :]
+    return tk, acc + coef[:, None] * tk[..., None, :]
 
 
 def ista_shrink_ref(a: Array, phi_y: Array, gram_a: Array, thresh: Array,

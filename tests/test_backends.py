@@ -175,7 +175,7 @@ def test_cheb_step_autopads_non_128_sizes():
 PAYLOAD = r"""
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import graph, wavelets
-from repro.dist import GraphOperator
+from repro.dist import GraphOperator, verify_message_scaling
 
 key = jax.random.PRNGKey(1)
 g, key = graph.connected_sensor_graph(key, n=600, theta=0.07, kappa=0.07)
@@ -188,9 +188,12 @@ mesh = jax.make_mesh((8,), ("graph",),
                      axis_types=(jax.sharding.AxisType.Auto,))
 f = jax.random.normal(key, (g.n_vertices,))
 a = jax.random.normal(jax.random.PRNGKey(2), (op.eta, g.n_vertices))
+B = 64
+F = jax.random.normal(jax.random.PRNGKey(3), (B, g.n_vertices))
 
 ref = op.plan("dense")
 out_ref, adj_ref, gram_ref = ref.apply(f), ref.apply_adjoint(a), ref.apply_gram(f)
+Fout_ref = ref.apply(F)
 for backend in ("pallas", "halo", "pallas_halo", "allgather"):
     plan = (op.plan(backend, mesh=mesh) if backend != "pallas"
             else op.plan(backend))
@@ -200,13 +203,25 @@ for backend in ("pallas", "halo", "pallas_halo", "allgather"):
     lhs = float(jnp.sum(plan.apply(f) * a))
     rhs = float(jnp.sum(f * plan.apply_adjoint(a)))
     assert abs(lhs - rhs) < 1e-2 * abs(lhs), (backend, lhs, rhs)
+    # batched (..., N) contract under genuine sharding: B=64 signals match
+    # the dense reference, and the exchange-round count is batch-invariant
+    # (per-signal messages = 2K|E|/B)
+    Fout = plan.apply(F)
+    assert Fout.shape == (B, op.eta, g.n_vertices), (backend, Fout.shape)
+    assert float(jnp.abs(Fout - Fout_ref).max()) < 1e-4, backend
+    if backend != "pallas":
+        v = verify_message_scaling(plan, g.n_edges, batch=B)
+        assert v["max_rel_dev"] == 0.0, (backend, v["rel_dev"])
+        assert v["per_signal_messages"]["apply"] == (
+            2 * op.K * g.n_edges / B), backend
     print(f"{backend} OK", plan.info)
 print("BACKENDS OK")
 """
 
 
 def test_backends_match_dense_8shards():
-    """Genuinely sharded (8 forced host devices) halo + allgather plans
-    match the dense reference and stay true adjoint pairs."""
+    """Genuinely sharded (8 forced host devices) backend plans match the
+    dense reference (single and B=64 batched signals), stay true adjoint
+    pairs, and keep batch-invariant exchange rounds."""
     out = run_payload(PAYLOAD, n_devices=8)
     assert "BACKENDS OK" in out

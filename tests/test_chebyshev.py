@@ -111,12 +111,14 @@ def test_message_counts_match_paper(setup):
 
 
 def test_matrix_signal_apply(setup):
-    """SSL path: the recurrence is linear, columns processed jointly."""
+    """SSL path: the recurrence is linear, batch signals processed jointly
+    under the (..., N) contract (leading batch dims, vertex axis last)."""
     g, L, lmax, _ = setup
     op = graph_multiplier(L, filters.tikhonov(0.5), lmax, K=20)
-    Y = jax.random.normal(jax.random.PRNGKey(4), (g.n_vertices, 3))
+    Y = jax.random.normal(jax.random.PRNGKey(4), (3, g.n_vertices))
     joint = op.apply(Y)
+    assert joint.shape == Y.shape
     for j in range(3):
         np.testing.assert_allclose(
-            np.asarray(joint[:, j]), np.asarray(op.apply(Y[:, j])), atol=1e-4
+            np.asarray(joint[j]), np.asarray(op.apply(Y[j])), atol=1e-4
         )

@@ -30,7 +30,7 @@ out_c = uop.apply(y)
 assert float(jnp.abs(out_d[:, :n] - out_c).max()) < 1e-4
 
 a = out_c
-apad = dist.pad_signal(a.T, parts).T
+apad = dist.pad_signal(a, parts)  # pads the trailing vertex axis
 adj_d = dist.dist_cheb_apply_adjoint(mesh, parts, apad, coeffs, lmax)
 assert float(jnp.abs(adj_d[:n] - uop.apply_adjoint(a)).max()) < 1e-4
 
