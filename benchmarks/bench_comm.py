@@ -10,20 +10,18 @@ Also reports the TPU halo-byte analog of the sharded path."""
 import jax
 import numpy as np
 
-from repro.core import graph
 from repro.core.wavelets import sgwt_multipliers
 from repro.dist import GraphOperator
 from repro.dist.backends import halo as dist
 
-from .common import make_backend_plan, row, write_json
+from .common import make_backend_plan, row, seeded_sensor_graph, write_json
 
 
 def sweep_backends(backends, json_dir=".", K=20, J=6):
     """Per-backend communication model through the plan API: the paper's
     scalar-message accounting plus each backend's collective-byte model."""
-    key = jax.random.PRNGKey(0)
-    g, key = graph.connected_sensor_graph(key, n=600, theta=0.07, kappa=0.07)
-    gs, _ = graph.spatial_sort(g)
+    gs, _ = seeded_sensor_graph(600, sort=True)
+    g = gs
     lmax = gs.lambda_max_bound()
     op = GraphOperator(P=gs.laplacian(),
                        multipliers=sgwt_multipliers(lmax, J),
@@ -59,13 +57,9 @@ def sweep_backends(backends, json_dir=".", K=20, J=6):
 def run(backends=None, json_dir="."):
     if backends:
         sweep_backends(backends, json_dir)
-    key = jax.random.PRNGKey(0)
     K, J = 20, 6
     for n in (125, 250, 500, 1000):
-        # keep expected degree constant: kappa ~ sqrt(500/n) * 0.075
-        kappa = 0.075 * float(np.sqrt(500.0 / n))
-        g, key = graph.connected_sensor_graph(key, n=n, theta=kappa,
-                                              kappa=kappa)
+        g, _ = seeded_sensor_graph(n)
         E = g.n_edges
         lmax = g.lambda_max_bound()
         op = GraphOperator(P=g.laplacian(),
@@ -81,8 +75,7 @@ def run(backends=None, json_dir="."):
             f"ratio={admm_scalars / max(ista_scalars, 1):.1f}x")
 
     # sharded halo-byte analog (DESIGN.md §3)
-    g, key = graph.connected_sensor_graph(key, n=600, theta=0.07, kappa=0.07)
-    gs, _ = graph.spatial_sort(g)
+    gs, _ = seeded_sensor_graph(600, sort=True)
     parts, leak = dist.partition_banded(np.asarray(gs.laplacian()), 8)
     row("comm_halo_8shards", 0.0,
         f"leak={leak};bytes_per_apply={dist.halo_bytes_per_apply(parts, K)};"

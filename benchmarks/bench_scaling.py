@@ -32,24 +32,17 @@ DEFAULT_SHARDS = 8
 
 def _measure(backends, sizes, n_shards, json_dir, K=15, J=3):
     import jax
-    import numpy as np
 
-    from repro.core import graph
     from repro.core.wavelets import sgwt_multipliers
     from repro.dist import GraphOperator, verify_message_scaling
 
-    from .common import row, write_json
+    from .common import row, seeded_sensor_graph, write_json
 
     mesh = jax.make_mesh((n_shards,), ("graph",))
-    key = jax.random.PRNGKey(0)
     curve = []
     for n in sizes:
-        # keep expected degree roughly constant across sizes
-        kappa = 0.075 * float(np.sqrt(500.0 / n))
-        g, key = graph.connected_sensor_graph(key, n=n, theta=kappa,
-                                              kappa=kappa)
-        gs, _ = graph.spatial_sort(g)
-        E = g.n_edges
+        gs, _ = seeded_sensor_graph(n, sort=True)
+        E = gs.n_edges
         lmax = gs.lambda_max_bound()
         op = GraphOperator(P=gs.laplacian(),
                            multipliers=sgwt_multipliers(lmax, J),

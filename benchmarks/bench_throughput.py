@@ -16,7 +16,6 @@ import argparse
 import os
 
 import jax
-import numpy as np
 
 from .common import row, time_fn
 
@@ -30,17 +29,15 @@ def run(backends=None, batch_sizes=DEFAULT_BATCHES, n=500, K=20, J=2,
         json_path=DEFAULT_JSON, iters=10):
     """Sweep plan.apply throughput over batch sizes; returns the result dict
     (also written to `json_path` unless it is falsy)."""
-    from repro.core import graph, wavelets
+    from repro.core import wavelets
     from repro.dist import GraphOperator
 
+    from .common import seeded_sensor_graph
+
     backends = list(backends or DEFAULT_BACKENDS)
-    key = jax.random.PRNGKey(0)
-    # connection radius ~ 1/sqrt(n) keeps the expected degree (and the
-    # chance of a connected draw) stable across sizes
-    radius = 0.075 * float(np.sqrt(500.0 / n))
-    g, key = graph.connected_sensor_graph(key, n=n, theta=radius,
-                                          kappa=radius)
-    gs, _ = graph.spatial_sort(g)  # banded order so halo backends are exact
+    # banded (sorted) order so the halo backends are exact
+    gs, key = seeded_sensor_graph(n, sort=True)
+    g = gs
     lmax = gs.lambda_max_bound()
     op = GraphOperator(P=gs.laplacian(),
                        multipliers=wavelets.sgwt_multipliers(lmax, J=J),

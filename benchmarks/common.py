@@ -41,3 +41,22 @@ def make_backend_plan(op, backend):
     """Plan `op` under `backend` (sharded backends default to a 1-D mesh
     over every visible device)."""
     return op.plan(backend)
+
+
+def seeded_sensor_graph(n, seed=0, sort=False):
+    """The benches' shared deterministic sensor network.
+
+    PRNGKey(seed) with a connection radius ~ 1/sqrt(n) (the scaling the
+    comm/scaling/throughput benches use) keeps the expected degree — and
+    the chance of a connected draw — stable across sizes.  `sort=True`
+    returns the spatially sorted (banded) graph the halo backends need.
+    Returns (graph, key)."""
+    from repro.core import graph
+
+    radius = 0.075 * float(np.sqrt(500.0 / n))
+    key = jax.random.PRNGKey(seed)
+    g, key = graph.connected_sensor_graph(key, n=n, theta=radius,
+                                          kappa=radius)
+    if sort:
+        g, _ = graph.spatial_sort(g)
+    return g, key

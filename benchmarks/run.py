@@ -13,7 +13,10 @@ JSON file per backend to --json-dir.  The `scaling` benchmark
 checks them against the paper's 2K|E| closed form across graph sizes.
 The `throughput` benchmark (bench_throughput) sweeps batch sizes
 B in {1, 8, 64} through every backend's batched apply and writes the
-repo-root BENCH_throughput.json signals/sec trajectory.
+repo-root BENCH_throughput.json signals/sec trajectory.  The `fig2`
+benchmark drives the Section-V solvers (chebyshev/jacobi/cheb_jacobi/arma)
+through the sharded `plan.solve` path and writes the repo-root
+BENCH_fig2.json error-vs-measured-communication table.
 """
 import argparse
 import sys
@@ -45,7 +48,19 @@ def main() -> None:
     if "fig1" in wanted:
         bench_fig1_denoising.run(n_trials=1000 if args.full else 20)
     if "fig2" in wanted:
-        bench_fig2_methods.run(budget=20)
+        # Section-V method comparison through the distributed plan.solve
+        # path; the tracked repo-root BENCH_fig2.json is only rewritten by
+        # a default sweep (like BENCH_throughput.json below)
+        import os
+
+        if backends is None and args.json_dir == ".":
+            fig2_json = bench_fig2_methods.DEFAULT_JSON
+        else:
+            fig2_json = os.path.join(args.json_dir, "BENCH_fig2.json")
+        fig2_backend = (backends[0] if backends
+                        else bench_fig2_methods.DEFAULT_BACKEND)
+        bench_fig2_methods.run(budget=20, backend=fig2_backend,
+                               json_path=fig2_json)
     if "lasso" in wanted:
         bench_lasso.run(n_trials=20 if args.full else 4,
                         n_iters=300 if args.full else 120)

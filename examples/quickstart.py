@@ -27,6 +27,12 @@ def main():
     ap.add_argument("--backend", default="dense",
                     choices=available_backends(),
                     help="execution backend for the multiplier application")
+    ap.add_argument("--method", default="chebyshev",
+                    choices=["chebyshev", "jacobi", "cheb_jacobi", "arma"],
+                    help="Section-V solver for the Tikhonov application: "
+                    "the Chebyshev approximation (Section IV) or an exact "
+                    "iterative solve of (tau I + 2 L^r) f = tau y via "
+                    "plan.solve (Eqs. (24)/(25)/(29)-(30))")
     args = ap.parse_args()
 
     p = SENSOR500
@@ -51,7 +57,18 @@ def main():
                       multipliers=[filters.tikhonov(p.tau, p.r)],
                       lmax=lmax, K=p.K)
     plan = R.plan(args.backend)  # sharded backends build their own mesh
-    denoised = plan.apply(y)[0]
+    if args.method == "chebyshev":
+        denoised = plan.apply(y)[0]
+    else:
+        # the same multiplier served by the Section-V exact solvers: the
+        # Prop. 2 filter tau/(tau + 2 lambda^r) is the rational problem
+        # den(L) f = tau y with den = tau + 2 lambda^r
+        res = plan.solve(y, args.method, tau=p.tau, r=p.r, h_scale=2.0,
+                         n_iters=p.K)
+        denoised = res.x
+        print(f"plan.solve[{args.method}]: {res.n_iters} iterations x "
+              f"{res.info['matvecs_per_round']} matvec(s)/round = "
+              f"{res.info['exchange_rounds']} exchange rounds")
 
     if order is not None:  # undo the sort so the MSE lines up with f0
         import numpy as np

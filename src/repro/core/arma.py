@@ -14,6 +14,15 @@ and summing x = const*y + sum_k x_k. Convergence requires
 Poles/residues may be complex (they appear in conjugate pairs for real
 filters); iterates are carried in complex dtype and the real part is
 returned.
+
+Distributed form: `matvec` follows the repo-wide (..., N) contract (applies
+P along the last axis, broadcasting over leading dims).  The K parallel
+pole recursions are *stacked* on a leading axis and the complex iterate is
+carried as a real [Re, Im] stack, so one iteration issues exactly ONE
+matvec — in a sharded backend that is one neighbour exchange of length-K
+messages per round (Section V-D's communication accounting), and the real
+stack keeps the Pallas/Block-ELL kernels (which are real-dtype) on the hot
+path.  `repro.dist.solvers` runs this loop inside every execution backend.
 """
 from __future__ import annotations
 
@@ -44,6 +53,53 @@ def arma_from_partial_fractions(
     return r, p
 
 
+def arma_from_rational(
+    num: Sequence[float],
+    den: Sequence[float],
+    lmax: float,
+    lmin: float = 0.0,
+) -> Tuple[np.ndarray, np.ndarray, float]:
+    """ARMA (r, p, const) for an arbitrary rational g = num(lambda)/den(lambda).
+
+    `num` / `den` are monomial coefficients low-degree-first (index m is the
+    lambda^m coefficient).  Requires deg(num) <= deg(den) and simple
+    (pairwise-distinct) denominator roots; the partial-fraction residues are
+    rho_i = rem(lambda_i) / den'(lambda_i) with `rem` the polynomial-division
+    remainder, and the poles map through
+    :func:`arma_from_partial_fractions`.  Generalizes the ready-made
+    Section V-E presets below — e.g. `arma_from_rational((tau,), (tau, 1.0),
+    lmax)` reproduces :func:`arma_tikhonov_first_order`.
+    """
+    num_hi = np.trim_zeros(np.asarray(num, dtype=np.float64)[::-1], "f")
+    den_hi = np.trim_zeros(np.asarray(den, dtype=np.float64)[::-1], "f")
+    if den_hi.size == 0:
+        raise ValueError("den must be a nonzero polynomial")
+    if num_hi.size > den_hi.size:
+        raise ValueError(
+            f"deg(num)={num_hi.size - 1} > deg(den)={den_hi.size - 1}: "
+            "g must be proper (or at most biproper) for the ARMA form (29)")
+    if den_hi.size == 1:
+        raise ValueError("den is constant — g is polynomial, use Chebyshev")
+    if num_hi.size == 0:
+        num_hi = np.zeros(1)
+    # deg(num) <= deg(den), so the quotient is the constant term of g
+    quo, rem = np.polydiv(num_hi, den_hi)
+    const = float(quo[-1])
+    roots = np.roots(den_hi)
+    if roots.size > 1:
+        dist = np.abs(roots[:, None] - roots[None, :])
+        np.fill_diagonal(dist, np.inf)
+        scale = max(float(np.abs(roots).max()), 1.0)
+        if float(dist.min()) < 1e-8 * scale:
+            raise ValueError(
+                "den has (numerically) repeated roots — the simple-pole "
+                "partial-fraction form (29) does not apply")
+    dden = np.polyder(den_hi)
+    residues = [np.polyval(rem, li) / np.polyval(dden, li) for li in roots]
+    r, p = arma_from_partial_fractions(list(roots), residues, lmax, lmin)
+    return r, p, const
+
+
 def arma_stable(p: np.ndarray, lmax: float, lmin: float = 0.0) -> bool:
     """Convergence check |p_k| > (lmax - lmin)/2 (Section V-D)."""
     return bool(np.all(np.abs(p) > (lmax - lmin) / 2.0))
@@ -59,6 +115,22 @@ def arma_eval(r: np.ndarray, p: np.ndarray, lam, lmax: float,
     return out.real
 
 
+def _complex_matvec(matvec: MatVec) -> Callable[[Array], Array]:
+    """Apply a real matvec to a complex iterate as one [Re, Im] stack.
+
+    The stack rides the matvec's leading batch dims ((..., N) contract), so
+    the complex application still costs ONE exchange round — and the matvec
+    only ever sees real arrays, keeping real-dtype kernels/collectives
+    usable."""
+
+    def mv(z: Array) -> Array:
+        st = jnp.stack([z.real, z.imag])
+        out = matvec(st)
+        return jax.lax.complex(out[0], out[1])
+
+    return mv
+
+
 def arma_apply(
     matvec: MatVec,
     y: Array,
@@ -72,9 +144,15 @@ def arma_apply(
 ):
     """Iterate (30) for each (r_k, p_k) in parallel; return const*y + sum_k x_k.
 
-    Each iteration costs one application of P per pole — with the poles
-    stacked, the distributed analog is one neighbourhood exchange of
-    length-K messages per iteration (Section V-D's communication accounting).
+    y: (..., N) batched signals; `matvec` must follow the (..., N) contract
+    (contract the LAST axis, broadcast over leading dims — e.g.
+    ``lambda v: jnp.einsum("ij,...j->...i", P, v)``).  The poles are
+    stacked on a leading axis and the complex iterate is carried as a real
+    [Re, Im] stack, so each iteration costs exactly one matvec — the
+    distributed analog is one neighbourhood exchange of length-K messages
+    per iteration (Section V-D's communication accounting), for the whole
+    batch.  With `return_history=True` also returns the (n_iters, ..., N)
+    real iterate history.
     """
     rj = jnp.asarray(r, dtype=jnp.complex64)
     pj = jnp.asarray(p, dtype=jnp.complex64)
@@ -82,7 +160,7 @@ def arma_apply(
     yc = y.astype(jnp.complex64)
     Kp = rj.shape[0]
     x0 = jnp.zeros((Kp,) + y.shape, dtype=jnp.complex64)
-    mv = jax.vmap(matvec)
+    mv = _complex_matvec(matvec)
 
     def shape_coef(c):
         return c[(...,) + (None,) * y.ndim]

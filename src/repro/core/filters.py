@@ -99,6 +99,65 @@ def identity_multiplier() -> Callable:
     return lambda lam: np.ones_like(np.asarray(lam, dtype=np.float64))
 
 
+# -- Section V rational (num/den) solve specs ---------------------------------
+# Monomial-coefficient forms (low-degree-first tuples) of the filters whose
+# application the Section-V solvers frame as Q x = y: `plan.solve` consumes
+# these as num=/den= and derives the Jacobi split, the accelerated weights
+# and the ARMA pole/residue recursion from one spec (see
+# repro.dist.solvers / docs/PAPER_MAP.md Eqs. (23)-(30)).
+def power_rational(tau: float, r: int = 1, scale: float = 1.0):
+    """(num, den) of g(lambda) = tau / (tau + scale * lambda^r).
+
+    scale=1 is the Section V-E / SSL family tau/(tau + lambda^r)
+    (`ssl_multiplier(power_kernel(r), tau)`); scale=2 is Prop. 2's
+    Tikhonov multiplier (see :func:`tikhonov_rational`)."""
+    if r < 1:
+        raise ValueError(f"r must be >= 1, got {r}")
+    den = [float(tau)] + [0.0] * (r - 1) + [float(scale)]
+    return (float(tau),), tuple(den)
+
+
+def tikhonov_rational(tau: float, r: int = 1):
+    """(num, den) of the Prop. 2 denoising multiplier tau/(tau + 2 lambda^r)
+    — the rational form of :func:`tikhonov`, i.e. the exact-solver route to
+    the Section IV-D denoising experiment (quickstart `--method jacobi`)."""
+    return power_rational(tau, r, scale=2.0)
+
+
+def inverse_filter_rational(psi_coeffs, tau: float, r: int = 1):
+    """(num, den) of Prop. 3's regularized deconvolution multiplier for a
+    *polynomial* blur g_psi(lambda) = sum_m psi_m lambda^m:
+
+        h = tau g_psi / (tau g_psi^2 + 2 lambda^r),
+
+    the rational form of :func:`inverse_filter`.  Computing h(P) y then
+    solves (tau Psi^2 + 2 P^r) f = tau Psi y — `plan.solve` runs exactly
+    that system distributed (numerator matvecs for the right-hand side,
+    Jacobi/ARMA rounds for the solve)."""
+    psi = np.asarray(psi_coeffs, dtype=np.float64)
+    num = tau * psi
+    den = tau * np.convolve(psi, psi)
+    if len(den) < r + 1:
+        den = np.concatenate([den, np.zeros(r + 1 - len(den))])
+    den[r] += 2.0
+    return tuple(float(c) for c in num), tuple(float(c) for c in den)
+
+
+def random_walk_rational(tau: float, beta: float = 2.0, r: int = 3):
+    """(num, den) of g = tau/(tau + (beta - lambda)^{-r}), the Fig. 2(c)
+    random-walk setting (S = (beta I - L_norm)^{-r}): multiplying through by
+    (beta - lambda)^r gives the biproper rational form
+    tau (beta-l)^r / (tau (beta-l)^r + 1) whose partial fractions are the
+    third-order ARMA recursion (`arma_random_walk_3` for tau=0.5, r=3)."""
+    from numpy.polynomial import polynomial as npoly
+
+    base = npoly.polypow([float(beta), -1.0], r)  # (beta - lambda)^r, low-first
+    num = tau * np.asarray(base)
+    den = num.copy()
+    den[0] += 1.0
+    return tuple(float(c) for c in num), tuple(float(c) for c in den)
+
+
 # -- Section V-E experiment filters -------------------------------------------
 def fig2_target(h: Callable, tau: float) -> Callable:
     """The Section V-E forward operator g(lambda) = (tau + h(lambda))/tau,

@@ -9,10 +9,24 @@ off-diagonal split) the Jacobi iteration is
 and the Chebyshev-accelerated variant (Saad / Demmel [51, Alg. 6.7]) is
 Eq. (25). Note (paper, Section V-B): the "Chebyshev" here reweights Jacobi
 iterates; it is *not* the polynomial approximation of Section IV.
+
+Distributed form: both solvers follow the repo-wide (..., N) signal
+contract — `q_matvec` applies Q along the *last* axis of its argument and
+broadcasts over leading batch dims, so a (B, N) stack of right-hand sides
+rides the same exchange rounds as a single signal, and the iteration body
+runs unchanged inside a shard_map (see `repro.dist.solvers`, which drives
+these loops through every registered execution backend).  The update is
+written as
+
+    x^{(t+1)} = x^{(t)} + Q_D^{-1} (y - Q x^{(t)})
+
+(algebraically identical to (24)) so that only the *reciprocal* diagonal
+appears: a shard whose padded tail carries `inv_diag == 0` keeps those
+rows identically zero instead of NaN-poisoning the halo exchange.
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,27 +35,46 @@ Array = jax.Array
 MatVec = Callable[[Array], Array]
 
 
+def _resolve_inv_diag(q_diag, inv_diag):
+    if inv_diag is not None:
+        return jnp.asarray(inv_diag)
+    if q_diag is None:
+        raise ValueError("pass q_diag or inv_diag")
+    return 1.0 / jnp.asarray(q_diag)
+
+
 def jacobi_solve(
     q_matvec: MatVec,
-    q_diag: Array,
+    q_diag: Optional[Array],
     y: Array,
     n_iters: int,
     x0: Array = None,
     return_history: bool = False,
+    inv_diag: Optional[Array] = None,
+    use_pallas: Optional[bool] = None,
 ):
     """Jacobi iteration (24) for Q x = y.
 
-    q_matvec: applies the full Q.  q_diag: diagonal of Q (length N).
+    q_matvec: applies the full Q along the last axis ((..., N) contract).
+    q_diag: diagonal of Q (length N); alternatively pass `inv_diag`
+    (= 1/q_diag) directly — the sharded solver path does, with zeros on
+    padded rows.  y: (..., N) batched right-hand sides.
     Convergence iff spectral_radius(Q_D^{-1} Q_O) < 1 [50, Thm 4.1]
-    (e.g. Q strictly diagonally dominant).
+    (e.g. Q strictly diagonally dominant).  `use_pallas` routes the
+    elementwise update through the fused `kernels.ops.jacobi_update`
+    (kernels.ops dispatch policy; None = native on TPU, jnp oracle on CPU).
+
+    With `return_history=True` also returns the (n_iters, ..., N) stack of
+    iterates (the Fig. 2 error-vs-budget hook).
     """
+    from ..kernels import ops  # lazy: core stays importable without kernels
+
+    inv_d = _resolve_inv_diag(q_diag, inv_diag)
     x = jnp.zeros_like(y) if x0 is None else x0
-    inv_d = 1.0 / q_diag
 
     def body(x, _):
-        # Q_O x = Q_D x - Q x
-        qo_x = q_diag * x - q_matvec(x)
-        x_new = inv_d * qo_x + inv_d * y
+        x_new = ops.jacobi_update(q_matvec(x), x, x, y, inv_d,
+                                  w=1.0, s=0.0, use_pallas=use_pallas)
         return x_new, x_new if return_history else None
 
     x_final, hist = jax.lax.scan(body, x, None, length=n_iters)
@@ -52,33 +85,41 @@ def jacobi_solve(
 
 def jacobi_chebyshev_solve(
     q_matvec: MatVec,
-    q_diag: Array,
+    q_diag: Optional[Array],
     y: Array,
     rho: float,
     n_iters: int,
     x0: Array = None,
     return_history: bool = False,
+    inv_diag: Optional[Array] = None,
+    use_pallas: Optional[bool] = None,
 ):
     """Chebyshev-accelerated Jacobi, Eq. (25).
 
     rho: upper bound on the spectral radius of Q_D^{-1} Q_O (must be < 1).
+    Same (..., N) batched contract and `inv_diag` escape hatch as
+    :func:`jacobi_solve`; each iteration costs exactly one `q_matvec`.
     """
-    inv_d = 1.0 / q_diag
+    from ..kernels import ops
+
+    inv_d = _resolve_inv_diag(q_diag, inv_diag)
     x_prev = jnp.zeros_like(y) if x0 is None else x0
 
     def jac_step(x):
-        return inv_d * (q_diag * x - q_matvec(x)) + inv_d * y
+        return ops.jacobi_update(q_matvec(x), x, x, y, inv_d,
+                                 w=1.0, s=0.0, use_pallas=use_pallas)
 
     x = jac_step(x_prev)  # x^{(1)}
     xi_prev, xi = 1.0, rho
-    history = [x_prev, x]
 
     def body(carry, _):
         x, x_prev, xi, xi_prev = carry
         xi_next = 1.0 / (2.0 / (rho * xi) - 1.0 / xi_prev)
         w = 2.0 * xi_next / (rho * xi)
-        qo_x = q_diag * x - q_matvec(x)
-        x_next = w * inv_d * qo_x - (xi_next / xi_prev) * x_prev + w * inv_d * y
+        s = xi_next / xi_prev
+        # x_next = w * (x + inv_d (y - Q x)) - s * x_prev    (Eq. (25))
+        x_next = ops.jacobi_update(q_matvec(x), x, x_prev, y, inv_d,
+                                   w=w, s=s, use_pallas=use_pallas)
         return (x_next, x, xi_next, xi), (x_next if return_history else None)
 
     (x_final, _, _, _), hist = jax.lax.scan(
@@ -86,7 +127,9 @@ def jacobi_chebyshev_solve(
         length=max(n_iters - 1, 0),
     )
     if return_history:
-        return x_final, hist
+        # the scan records x^(2)..x^(n_iters); prepend x^(1) so the history
+        # is the full (n_iters, ..., N) stack like jacobi_solve's
+        return x_final, jnp.concatenate([x[None], hist], axis=0)
     return x_final
 
 

@@ -8,20 +8,26 @@
 * :mod:`repro.dist.commstats` — measured communication accounting
   (`CommStats`, `plan_comm_stats`): counts the collectives a plan traces
   to and converts them to the paper's 2K|E| message model.
+* :mod:`repro.dist.solvers`   — Section-V iterative solvers (Jacobi,
+  Chebyshev-accelerated Jacobi, parallel ARMA) behind `plan.solve`,
+  running inside every backend via the `matvec_runner` primitive.
 * :mod:`repro.dist.gossip`    — Chebyshev ring consensus (the paper's
   Algorithm 1 on the device ring) for fabric-free gradient averaging.
 """
-from . import commstats, gossip, sharding
+from . import commstats, gossip, sharding, solvers
 from .backends import available_backends, get_backend, register_backend
-from .commstats import CommStats, plan_comm_stats, verify_message_scaling
+from .commstats import (CommStats, plan_comm_stats, solve_comm_stats,
+                        verify_message_scaling)
 from .operator import ExecutionPlan, GraphOperator, as_graph_operator
 from .sharding import ShardingRules, make_rules
+from .solvers import SolveResult, solve_plan
 
 __all__ = [
     "CommStats",
     "ExecutionPlan",
     "GraphOperator",
     "ShardingRules",
+    "SolveResult",
     "as_graph_operator",
     "available_backends",
     "commstats",
@@ -31,5 +37,8 @@ __all__ = [
     "plan_comm_stats",
     "register_backend",
     "sharding",
+    "solve_comm_stats",
+    "solve_plan",
+    "solvers",
     "verify_message_scaling",
 ]

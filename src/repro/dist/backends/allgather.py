@@ -146,9 +146,35 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
         return dist_cheb_apply_gram_allgather(mesh, Pp, _pad(f), coeffs,
                                               lmax, axis)[..., :n]
 
+    def matvec_runner(fn, signals, consts=()):
+        # Section-V solver substrate for general graphs: `fn` runs inside
+        # one shard_map with the row-block matvec (one all_gather of the
+        # iterate per solver matvec); vertex-last signals shard, consts
+        # replicate, outputs crop back to the logical n.
+        padded = tuple(_pad(jnp.asarray(s)) for s in signals)
+        nl = total // n_shards
+        local = tuple(
+            jax.ShapeDtypeStruct(s.shape[:-1] + (nl,), s.dtype)
+            for s in padded)
+        out_sds = jax.eval_shape(lambda *a: fn(lambda v: v, *a),
+                                 *local, *consts)
+        in_specs = ((P(axis, None),)
+                    + tuple(_vspec(s.ndim, axis) for s in padded)
+                    + tuple(P() for _ in consts))
+        out_specs = jax.tree.map(lambda sd: _vspec(len(sd.shape), axis),
+                                 out_sds)
+
+        def run(rows, *rest):
+            mv = _allgather_matvec(rows, axis)
+            return fn(mv, *rest)
+
+        outs = _sharded(run, mesh, in_specs, out_specs)(Pp, *padded, *consts)
+        return jax.tree.map(lambda o: o[..., :n], outs)
+
     return ExecutionPlan(
         op=op, backend="allgather",
         apply=apply, apply_adjoint=apply_adjoint, apply_gram=apply_gram,
+        matvec_runner=matvec_runner,
         info={
             "mesh_axis": axis,
             "n_shards": n_shards,

@@ -36,8 +36,14 @@ def build(op, *, mesh=None, partition=None, **options):
     def apply_gram(f: Array) -> Array:
         return cheb.cheb_apply_gram(mv, f, coeffs, lmax)
 
+    def matvec_runner(fn, signals, consts=()):
+        # single-device reference: the logical N is the execution domain,
+        # so no padding/cropping and `mv` is P as given
+        return fn(mv, *signals, *consts)
+
     return ExecutionPlan(
         op=op, backend="dense",
         apply=apply, apply_adjoint=apply_adjoint, apply_gram=apply_gram,
+        matvec_runner=matvec_runner,
         info={"matvecs_per_apply": op.K},
     )

@@ -355,10 +355,37 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
         return LassoResult(coeffs=a_star[..., :n], signal=y_star[..., :n],
                            objective=jnp.nan, n_iters=n_iters, fused=True)
 
+    def matvec_runner(fn, signals, consts=()):
+        # Backend-generic iteration primitive (the Section-V solver
+        # substrate): run `fn` inside ONE shard_map with the ring-halo
+        # matvec; vertex-last signals shard on the vertex axis (zero-padded
+        # tails stay zero — solver bodies use reciprocal-diagonal updates),
+        # consts replicate, outputs crop back to the logical n.
+        padded = tuple(pad_signal(jnp.asarray(s), parts) for s in signals)
+        local = tuple(
+            jax.ShapeDtypeStruct(s.shape[:-1] + (parts.n_local,), s.dtype)
+            for s in padded)
+        out_sds = jax.eval_shape(lambda *a: fn(lambda v: v, *a),
+                                 *local, *consts)
+        in_specs = ((P(axis),) * 3
+                    + tuple(_vspec(s.ndim, axis) for s in padded)
+                    + tuple(P() for _ in consts))
+        out_specs = jax.tree.map(lambda sd: _vspec(len(sd.shape), axis),
+                                 out_sds)
+
+        def run(diag, left, right, *rest):
+            mv = _halo_matvec(diag[0], left[0], right[0], axis)
+            return fn(mv, *rest)
+
+        outs = _sharded(run, mesh, in_specs, out_specs)(
+            parts.diag, parts.left, parts.right, *padded, *consts)
+        return jax.tree.map(lambda o: o[..., :n], outs)
+
     return ExecutionPlan(
         op=op, backend="halo",
         apply=apply, apply_adjoint=apply_adjoint, apply_gram=apply_gram,
         solve_lasso_fn=solve_lasso,
+        matvec_runner=matvec_runner,
         info={
             "mesh_axis": axis,
             "n_shards": n_shards,

@@ -64,10 +64,19 @@ def build(op, *, mesh=None, partition=None, block: Tuple[int, int] = (8, 128),
                                    use_pallas=use_pallas)
         return out[..., 0, :n]
 
+    def matvec_runner(fn, signals, consts=()):
+        # run the iteration body against the Block-ELL SpMV on the padded
+        # domain; every output's trailing vertex axis is cropped back to n
+        padded = tuple(ops.pad_trailing(jnp.asarray(s), total)
+                       for s in signals)
+        outs = fn(_mv, *padded, *consts)
+        return jax.tree.map(lambda o: o[..., :n], outs)
+
     nnz_blocks = int(np.asarray(A.mask).sum()) if hasattr(A, "mask") else None
     return ExecutionPlan(
         op=op, backend="pallas",
         apply=apply, apply_adjoint=apply_adjoint, apply_gram=apply_gram,
+        matvec_runner=matvec_runner,
         info={
             "block": block,
             "padded_n": total,

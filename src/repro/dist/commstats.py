@@ -244,6 +244,37 @@ def plan_comm_stats(plan, n: int = None, batch: int = None) -> Dict[str, CommSta
     }
 
 
+def solve_comm_stats(plan, method: str = "chebyshev", n: int = None,
+                     batch: int = None, **solve_kwargs) -> CommStats:
+    """Measure the communication of one `plan.solve(method=...)` call.
+
+    Traces ``plan.solve(y, method, **solve_kwargs).x`` on a (batch, n) (or
+    unbatched (n,)) float32 signal and tallies its collectives — the
+    Section-V accounting made measurable: a Jacobi round on
+    den(P) x = num(P) y costs deg(den) matvec exchanges (Fig. 2(b)'s "2
+    matvecs per iteration" shows up as ``exchange_rounds == 2 * n_iters``),
+    the ARMA recursion's stacked poles cost ONE exchange of length-K_p
+    messages per round, and batched signals leave the round count invariant
+    (`SolveResult.info["exchange_rounds"]` is the closed form this should
+    land on exactly).  Backends skip collectives on 1-shard meshes —
+    measure on >= 2 shards, like :func:`plan_comm_stats`.
+    """
+    op = plan.op
+    if n is None:
+        if callable(op.P):
+            raise ValueError("solve_comm_stats needs n= for a closure P")
+        n = int(np.asarray(op.P).shape[0])
+    shards = int(plan.info.get("n_shards", 1))
+    lead = () if batch is None else (int(batch),)
+    b = 1 if batch is None else int(batch)
+    y = jax.ShapeDtypeStruct(lead + (n,), np.float32)
+
+    def run(sig):
+        return plan.solve(sig, method, **solve_kwargs).x
+
+    return measure(run, y, n_shards=shards, batch=b)
+
+
 def verify_message_scaling(plan, n_edges: int, n: int = None,
                            batch: int = None) -> Dict[str, Any]:
     """Measured-vs-predicted message counts for one plan.

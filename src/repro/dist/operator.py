@@ -10,6 +10,7 @@ the execution strategy:
     sig  = plan.apply_adjoint(out)  # Phi~* a         (..., eta, N) -> (..., N)
     gr   = plan.apply_gram(f)       # Phi~* Phi~ f    (..., N) -> (..., N)
     res  = plan.solve_lasso(y, mu)  # Algorithm 3     (..., N) signals
+    sol  = plan.solve(y, method="jacobi", tau=0.5)  # Section V solvers
 
 Signals are ``(..., N)``: leading axes are batch signals, and because the
 Chebyshev recurrence is linear every batch signal rides the *same* K
@@ -52,6 +53,17 @@ class ExecutionPlan:
     apply_gram: Callable[[Array], Array]
     info: Dict[str, Any] = dataclasses.field(default_factory=dict)
     solve_lasso_fn: Optional[Callable] = None
+    #: Backend-generic distributed-iteration primitive (the Section-V solver
+    #: substrate): ``matvec_runner(fn, signals, consts=()) -> outputs`` runs
+    #: the jit-compatible body ``fn(mv, *signals, *consts)`` against this
+    #: backend's distributed matvec ``mv`` (applies P along the last axis on
+    #: the backend's padded/sharded domain).  `signals` are (..., N) arrays
+    #: with the vertex axis LAST — the runner pads them on the way in,
+    #: shards them on the vertex axis, and crops every output back to the
+    #: logical N; `consts` are small replicated arrays (coefficients).
+    #: Backends that leave it None fall back to the single-device reference
+    #: matvec in `plan.solve` (logged at INFO).
+    matvec_runner: Optional[Callable] = None
 
     # mirrored operator metadata -------------------------------------------
     @property
@@ -75,6 +87,38 @@ class ExecutionPlan:
 
     def message_counts(self, n_edges: int) -> dict:
         return self.op.message_counts(n_edges)
+
+    # Section V solvers -----------------------------------------------------
+    def solve(self, y: Array, method: str = "chebyshev", **kwargs):
+        """Apply x = g(P) y by a Section-V iterative method, distributed.
+
+        The solver problem is the rational filter g = num/den (monomial
+        coefficients, low-degree-first) — equivalently: solve
+        ``den(P) x = num(P) y`` (Eq. (23), Q = g(P)^{-1}).  Sugar: pass
+        ``tau=`` (+ ``r=``, ``h_scale=``) for the Tikhonov/SSL family
+        g = tau / (tau + h_scale * lambda^r); named specs live in
+        `repro.core.filters` (`tikhonov_rational`,
+        `inverse_filter_rational`, `random_walk_rational`).
+
+        method: ``"chebyshev"`` (Section IV truncated approximation, order
+        n_iters), ``"jacobi"`` (Eq. (24)), ``"cheb_jacobi"`` (Eq. (25);
+        needs rho < 1, estimated if omitted), ``"arma"`` (Eqs. (29)-(30);
+        pole/residue recursion, |p_k| > lmax/2 required for convergence).
+
+        y: (..., N) batched signals — every signal shares the exchange
+        rounds; each round costs exactly the backend's matvec communication
+        (boundary-only halos under halo/pallas_halo), with Jacobi rounds
+        costing deg(den) matvecs.  Runs inside this plan's
+        ``matvec_runner``; backends without one fall back to the reference
+        matvec (logged).  Returns a :class:`repro.dist.solvers.SolveResult`
+        (``history=True`` records the per-round iterates).
+
+        Keyword reference: see API.md ("Section V solvers — plan.solve")
+        and :func:`repro.dist.solvers.solve_plan`.
+        """
+        from .solvers import solve_plan
+
+        return solve_plan(self, y, method, **kwargs)
 
     # Algorithm 3 -----------------------------------------------------------
     def solve_lasso(self, y: Array, mu, gamma: Optional[float] = None,

@@ -30,6 +30,7 @@ from ..core.graph import BlockELL
 from . import ref
 from .bcsr_spmv import block_ell_spmv, block_ell_spmv_batched
 from .cheb_step import cheb_step
+from .jacobi_step import jacobi_step
 from .flash_attention import flash_attention as _flash
 from .soft_threshold import ista_shrink
 
@@ -156,6 +157,36 @@ def flash_attention(
         return _flash(q, k, v, causal=causal, scale=scale,
                       block_q=block_q, block_k=block_k, interpret=interp)
     return ref.attention_ref(q, k, v, causal=causal, scale=scale)
+
+
+def jacobi_update(
+    qx: Array,
+    x: Array,
+    x_prev: Array,
+    y: Array,
+    inv_d: Array,
+    *,
+    w,
+    s,
+    use_pallas: Optional[bool] = None,
+) -> Array:
+    """One fused (accelerated-)Jacobi round after the matvec ``qx = Q @ x``:
+
+        x_next = w * (x + inv_d * (y - qx)) - s * x_prev
+
+    (w = 1, s = 0 is the plain Jacobi sweep of Eq. (24); the Eq. (25)
+    acceleration weights vary per iteration and may be traced scalars).
+    The Section-V analog of `cheb_step`: five elementwise operands fused
+    into one HBM round-trip per solver round.  Shapes as in
+    :func:`repro.kernels.jacobi_step.jacobi_step`; complex iterates (none
+    in the Jacobi solvers — ARMA carries its own real [Re, Im] stack) fall
+    back to the jnp oracle.
+    """
+    use, interp = _resolve(use_pallas)
+    if use and not jnp.iscomplexobj(x):
+        return jacobi_step(qx, x, x_prev, y, inv_d, w=w, s=s,
+                           interpret=interp)
+    return ref.jacobi_step_ref(qx, x, x_prev, y, inv_d, w=w, s=s)
 
 
 def ista_update(

@@ -25,6 +25,16 @@ def cheb_step_ref(pt: Array, t_km1: Array, t_km2: Array, acc: Array,
     return tk, acc + coef[:, None] * tk[..., None, :]
 
 
+def jacobi_step_ref(qx: Array, x: Array, x_prev: Array, y: Array,
+                    inv_d: Array, *, w, s) -> Array:
+    """One (accelerated-)Jacobi update x_next = w (x + D^{-1}(y - Qx)) - s x_prev.
+
+    qx = Q @ x; all of qx/x/x_prev: (..., n); y/inv_d broadcastable against
+    them.  w = 1, s = 0 is the plain Jacobi sweep (Eq. (24)); the
+    Chebyshev-accelerated weights of Eq. (25) vary per iteration."""
+    return w * (x + inv_d * (y - qx)) - s * x_prev
+
+
 def ista_shrink_ref(a: Array, phi_y: Array, gram_a: Array, thresh: Array,
                     *, gamma: float) -> Array:
     z = a + gamma * (phi_y - gram_a)

@@ -23,3 +23,17 @@ def test_static_backend_scan_matches_live_registry():
     from repro.dist import available_backends
 
     assert check_docs.registered_backends() == set(available_backends())
+
+
+def test_every_backend_in_api_md():
+    assert check_docs.undocumented_backends_api() == []
+
+
+def test_every_solve_method_documented():
+    assert check_docs.undocumented_solve_methods() == []
+
+
+def test_static_solve_method_scan_matches_live_vocabulary():
+    from repro.dist.solvers import METHODS
+
+    assert check_docs.solve_methods() == set(METHODS)

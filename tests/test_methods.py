@@ -86,8 +86,9 @@ def test_arma_first_order_fixed_point(setup):
     N = Ln.shape[0]
     r, p, const = arma.arma_tikhonov_first_order(tau, 2.0)
     assert arma.arma_stable(p, 2.0)
-    x = arma.arma_apply(lambda v: jnp.asarray(Ln) @ v, y, r, p, 2.0,
-                        n_iters=300, const=const)
+    # matvec under the (..., N) contract: the pole stack rides leading dims
+    mv = lambda v: jnp.einsum("ij,...j->...i", jnp.asarray(Ln), v)
+    x = arma.arma_apply(mv, y, r, p, 2.0, n_iters=300, const=const)
     direct = np.linalg.solve((tau * np.eye(N) + Ln) / tau, np.asarray(y))
     np.testing.assert_allclose(np.asarray(x), direct, atol=1e-3)
 
@@ -136,7 +137,8 @@ def test_chebyshev_beats_alternatives_at_equal_communication(setup):
                                    jnp.diag(jnp.asarray(Ln)), tau)
     e_jac = float(jnp.linalg.norm(jacobi.jacobi_solve(qmv, qdiag, y, K) - f))
     r, p, const = arma.arma_tikhonov_first_order(tau, 2.0)
-    x_arma = arma.arma_apply(lambda v: jnp.asarray(Ln) @ v, y, r, p, 2.0,
-                             n_iters=K, const=const)
+    x_arma = arma.arma_apply(
+        lambda v: jnp.einsum("ij,...j->...i", jnp.asarray(Ln), v),
+        y, r, p, 2.0, n_iters=K, const=const)
     e_arma = float(jnp.linalg.norm(x_arma - f))
     assert e_cheb < e_jac and e_cheb < e_arma

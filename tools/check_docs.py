@@ -9,7 +9,11 @@ Two checks:
 2. **Backend coverage** — every execution backend registered in
    `src/repro/dist/backends/` (found statically via the
    `@register_backend("name")` decorators, so no jax import is needed)
-   must be mentioned in docs/ARCHITECTURE.md.
+   must be mentioned in docs/ARCHITECTURE.md AND in API.md (the backend
+   table there is the user-facing reference).
+3. **Solver-method coverage** — every `plan.solve` method string (the
+   `METHODS` literal in `src/repro/dist/solvers.py`, scanned via AST)
+   must appear in API.md.
 
 Exit code 0 on success; 1 with a report on stderr otherwise.
 `tests/test_docs.py` runs the same functions under pytest and
@@ -88,14 +92,44 @@ def registered_backends(repo: str = REPO):
     return names
 
 
+def _names_missing_from(names, path):
+    if not os.path.isfile(path):
+        return sorted(names)  # everything is missing
+    text = open(path, encoding="utf-8").read()
+    return sorted(n for n in names if f"`{n}`" not in text and n not in text)
+
+
 def undocumented_backends(repo: str = REPO):
     """Registered backend names missing from docs/ARCHITECTURE.md."""
-    arch = os.path.join(repo, "docs", "ARCHITECTURE.md")
-    if not os.path.isfile(arch):
-        return sorted(registered_backends(repo))  # everything is missing
-    text = open(arch, encoding="utf-8").read()
-    return sorted(n for n in registered_backends(repo)
-                  if f"`{n}`" not in text and n not in text)
+    return _names_missing_from(registered_backends(repo),
+                               os.path.join(repo, "docs", "ARCHITECTURE.md"))
+
+
+def undocumented_backends_api(repo: str = REPO):
+    """Registered backend names missing from API.md's backend reference."""
+    return _names_missing_from(registered_backends(repo),
+                               os.path.join(repo, "API.md"))
+
+
+def solve_methods(repo: str = REPO):
+    """The `plan.solve` method vocabulary, scanned statically from the
+    METHODS tuple literal in src/repro/dist/solvers.py (no jax import)."""
+    path = os.path.join(repo, "src", "repro", "dist", "solvers.py")
+    tree = ast.parse(open(path, encoding="utf-8").read(),
+                     filename="solvers.py")
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        if any(getattr(t, "id", None) == "METHODS" for t in node.targets):
+            value = ast.literal_eval(node.value)
+            return set(value)
+    raise AssertionError("METHODS literal not found in dist/solvers.py")
+
+
+def undocumented_solve_methods(repo: str = REPO):
+    """plan.solve method strings missing from API.md."""
+    return _names_missing_from(solve_methods(repo),
+                               os.path.join(repo, "API.md"))
 
 
 def main() -> int:
@@ -109,13 +143,23 @@ def main() -> int:
         print(f"backend {name!r} is registered but not documented in "
               "docs/ARCHITECTURE.md", file=sys.stderr)
         failures += 1
+    for name in undocumented_backends_api():
+        print(f"backend {name!r} is registered but missing from API.md",
+              file=sys.stderr)
+        failures += 1
+    for name in undocumented_solve_methods():
+        print(f"plan.solve method {name!r} is not documented in API.md",
+              file=sys.stderr)
+        failures += 1
     if failures:
         print(f"{failures} docs problem(s)", file=sys.stderr)
         return 1
     n_files = len(doc_files())
     n_backends = len(registered_backends())
+    n_methods = len(solve_methods())
     print(f"docs OK: {n_files} files link-clean, "
-          f"{n_backends} backends documented")
+          f"{n_backends} backends documented, "
+          f"{n_methods} solve methods documented")
     return 0
 
 
