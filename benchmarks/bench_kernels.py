@@ -1,7 +1,24 @@
 """Kernel micro-benchmarks: jitted reference path wall-time on CPU (TPU
 kernels are validated in interpret mode — timing them interpreted is
 meaningless, so the CSV times the jnp oracle the kernels must beat and
-reports roofline-model bytes/flops per call as `derived`)."""
+reports roofline-model bytes/flops per call as `derived`).
+
+`sweep_vs_step` is the single-launch-sweep acceptance microbenchmark: it
+times the whole K-order Chebyshev application through the per-order path
+(`ops.fused_cheb_apply(..., sweep=False)`: one SpMV + one cheb_step per
+order) against the sweep path (`ops.fused_cheb_sweep`: the recurrence as
+one fused trace / one kernel launch) over K in {5, 20, 50}, eta in {1, 3}
+and B in {1, 64}, and writes the repo-root ``BENCH_kernels.json`` whose
+top-level ``speedup_sweep_vs_step`` (geometric mean over configs) the CI
+smoke step gates at >= 1.0 via ``--check``.
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels \
+        [--n 500] [--ks 5,20,50] [--etas 1,3] [--batches 1,64] \
+        [--json-path BENCH_kernels.json] [--check] [--check-min 1.0]
+"""
+import argparse
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,6 +29,97 @@ from repro.dist import GraphOperator
 from repro.kernels import ops, ref
 
 from .common import make_backend_plan, row, time_fn, write_json
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_JSON = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+DEFAULT_KS = (5, 20, 50)
+DEFAULT_ETAS = (1, 3)
+DEFAULT_BATCHES = (1, 64)
+
+
+def sweep_vs_step(n=500, Ks=DEFAULT_KS, etas=DEFAULT_ETAS,
+                  batches=DEFAULT_BATCHES, iters=10, json_path=DEFAULT_JSON):
+    """Time the single-launch sweep against the per-order path.
+
+    Both arms run the jnp reference dispatch (`use_pallas=False`: the
+    interpret/ref CI path — interpret-mode kernel timings are
+    meaningless); the sweep arm is the same recurrence as ONE unrolled
+    fused trace, which is exactly what the sweep kernel does on TPU minus
+    the launch/HBM effects the CPU cannot model.  Writes `json_path` with
+    per-config us/call and a top-level geomean ``speedup_sweep_vs_step``;
+    returns the payload.
+    """
+    from .common import seeded_sensor_graph
+
+    import time
+
+    def time_pair(fa, fb, x, iters):
+        """Interleaved min-of-N timing (us) for two arms of a comparison.
+
+        Alternating the arms cancels machine-load drift between them, and
+        the minimum is the robust per-call estimator under interference
+        (any slowdown is additive noise); medians of separated runs flap
+        on shared runners.
+        """
+        for _ in range(2):
+            jax.block_until_ready(fa(x))
+            jax.block_until_ready(fb(x))
+        best_a = best_b = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fa(x))
+            t1 = time.perf_counter()
+            jax.block_until_ready(fb(x))
+            t2 = time.perf_counter()
+            best_a = min(best_a, t1 - t0)
+            best_b = min(best_b, t2 - t1)
+        return best_a * 1e6, best_b * 1e6
+
+    gs, key = seeded_sensor_graph(n, sort=True)
+    L = np.asarray(gs.laplacian())
+    A = graph.to_block_ell(L, (8, 128))
+    lmax = gs.lambda_max_bound()
+    configs = {}
+    speedups = []
+    for K in Ks:
+        for eta in etas:
+            coeffs = cheb.cheb_coeffs_stack(
+                [filters.tikhonov(1.0 + j) for j in range(eta)], K,
+                lmax).astype(np.float32)
+            per_order = jax.jit(lambda v, c=coeffs, K=K: ops.fused_cheb_apply(
+                A, v, c, lmax, use_pallas=False, sweep=False))
+            sweep = jax.jit(lambda v, c=coeffs, K=K: ops.fused_cheb_apply(
+                A, v, c, lmax, use_pallas=False))
+            for B in batches:
+                x = jax.random.normal(jax.random.PRNGKey(B), (B, A.padded_n))
+                us_step, us_sweep = time_pair(per_order, sweep, x, iters)
+                ratio = us_step / us_sweep
+                speedups.append(ratio)
+                configs[f"K{K}_eta{eta}_B{B}"] = {
+                    "per_order_us": us_step,
+                    "sweep_us": us_sweep,
+                    "speedup": ratio,
+                }
+                row(f"cheb_sweep_K{K}_eta{eta}_B{B}", us_sweep,
+                    f"per_order_us={us_step:.1f};speedup={ratio:.2f}")
+    geomean = float(np.exp(np.mean(np.log(speedups))))
+    payload = {
+        "bench": "kernels_sweep",
+        "n": int(gs.n_vertices),
+        "padded_n": int(A.padded_n),
+        "path": "ref",
+        "configs": configs,
+        "speedup_sweep_vs_step": geomean,
+    }
+    if json_path:
+        import json
+
+        parent = os.path.dirname(os.path.abspath(json_path))
+        os.makedirs(parent, exist_ok=True)
+        with open(json_path, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}", flush=True)
+    return payload
 
 
 def sweep_backends(backends, json_dir="."):
@@ -95,5 +203,40 @@ def run(backends=None, json_dir="."):
     row("ista_shrink_64k", us, f"eta={eta}")
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=500)
+    ap.add_argument("--ks", default="5,20,50")
+    ap.add_argument("--etas", default="1,3")
+    ap.add_argument("--batches", default="1,64")
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--json-path", default=DEFAULT_JSON,
+                    help="output JSON; '' disables writing")
+    ap.add_argument("--full", action="store_true",
+                    help="also run the legacy kernel CSV sweep")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless the sweep path's geomean speedup over "
+                    "the per-order path is >= --check-min")
+    ap.add_argument("--check-min", type=float, default=1.0,
+                    help="minimum speedup_sweep_vs_step for --check (the "
+                    "sweep must at least not regress the per-order path)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.full:
+        run()
+    payload = sweep_vs_step(
+        n=args.n,
+        Ks=tuple(int(k) for k in args.ks.split(",")),
+        etas=tuple(int(e) for e in args.etas.split(",")),
+        batches=tuple(int(b) for b in args.batches.split(",")),
+        iters=args.iters, json_path=args.json_path)
+    if args.check:
+        speedup = payload["speedup_sweep_vs_step"]
+        assert speedup >= args.check_min, (
+            f"sweep geomean speedup {speedup:.3f}x < {args.check_min}x — "
+            "the single-launch sweep regresses the per-order path")
+        print(f"# sweep gate OK: {speedup:.2f}x vs per-order", flush=True)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -8,7 +8,10 @@ Prints ``name,us_per_call,derived`` CSV rows.  --full uses paper-scale trial
 counts (slow on CPU); the default is a reduced but statistically meaningful
 configuration.  --backend sweeps bench_kernels/bench_comm through the
 `GraphOperator.plan()` API for each named backend and writes one comparable
-JSON file per backend to --json-dir.  The `scaling` benchmark
+JSON file per backend to --json-dir.  The `kernels` benchmark additionally
+runs the single-launch-sweep microbenchmark (`bench_kernels.sweep_vs_step`)
+and writes the repo-root ``BENCH_kernels.json`` with its
+``speedup_sweep_vs_step`` gate value.  The `scaling` benchmark
 (bench_scaling) measures messages-per-apply with repro.dist.commstats and
 checks them against the paper's 2K|E| closed form across graph sizes.
 The `throughput` benchmark (bench_throughput) sweeps batch sizes
@@ -68,6 +71,16 @@ def main() -> None:
         bench_comm.run(backends=backends, json_dir=args.json_dir)
     if "kernels" in wanted:
         bench_kernels.run(backends=backends, json_dir=args.json_dir)
+        # single-launch sweep vs per-order microbenchmark; the tracked
+        # repo-root BENCH_kernels.json is only rewritten by a default run
+        import os
+
+        if backends is None and args.json_dir == ".":
+            kernels_json = bench_kernels.DEFAULT_JSON
+        else:
+            kernels_json = os.path.join(args.json_dir, "BENCH_kernels.json")
+        bench_kernels.sweep_vs_step(json_path=kernels_json,
+                                    iters=10 if args.full else 5)
     if "throughput" in wanted:
         # B-sweep of the batched (..., N) contract.  The tracked repo-root
         # BENCH_throughput.json (the full 5-backend trajectory) is only

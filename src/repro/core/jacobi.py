@@ -30,9 +30,39 @@ from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 MatVec = Callable[[Array], Array]
+
+
+def jacobi_weights(n_iters: int) -> np.ndarray:
+    """The (w_t, s_t) schedule of the plain Jacobi sweep: every round of
+    Eq. (24) is the update with w = 1, s = 0.  Returned as an
+    (n_iters, 2) host array — the single-launch `jacobi_sweep` kernel
+    (`kernels.ops.fused_jacobi_sweep`) consumes it directly."""
+    return np.tile(np.array([1.0, 0.0]), (n_iters, 1))
+
+
+def cheb_jacobi_weights(rho: float, n_iters: int) -> np.ndarray:
+    """Host-side (w_t, s_t) schedule of Chebyshev-accelerated Jacobi.
+
+    Row 0 is the plain bootstrap step x^{(1)}; rows t >= 1 replay the
+    xi-recurrence of Eq. (25) exactly as `jacobi_chebyshev_solve` computes
+    it in its scan carry — but since rho is a concrete float, the whole
+    schedule is known at trace time, which is what lets the
+    single-launch `jacobi_sweep` kernel bake the weights in as a streamed
+    (n_iters, 2) operand instead of a traced recurrence.
+    """
+    rho = float(rho)
+    ws = np.zeros((n_iters, 2))
+    ws[0] = (1.0, 0.0)
+    xi_prev, xi = 1.0, rho
+    for t in range(1, n_iters):
+        xi_next = 1.0 / (2.0 / (rho * xi) - 1.0 / xi_prev)
+        ws[t] = (2.0 * xi_next / (rho * xi), xi_next / xi_prev)
+        xi_prev, xi = xi, xi_next
+    return ws
 
 
 def _resolve_inv_diag(q_diag, inv_diag):

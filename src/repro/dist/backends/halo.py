@@ -5,8 +5,19 @@ TPU adaptation of the paper's distributed model (DESIGN.md §3): one device
 holds a contiguous *block* of vertices instead of one sensor holding one
 vertex.  Spatially sorted sensor graphs are banded, so inter-shard coupling
 touches only adjacent shards; per Chebyshev order each shard exchanges its
-boundary block with its two ring neighbours — one collective_permute pair
-per order, matching the paper's 2K|E| message accounting.
+boundary *tile* — the h = coupling-bandwidth rows a neighbour actually
+reads — with its two ring neighbours: one collective_permute pair per
+order, matching the paper's 2K|E| message accounting.
+
+Interior/boundary split (see docs/ARCHITECTURE.md "Perf accounting"): the
+per-order matvec issues the two boundary-tile ppermutes *first*, computes
+the interior contribution (the diagonal block product, which needs no
+remote data) while the exchange is in flight, and applies the small
+(nl, h) boundary couplings only on arrival — the exchange latency hides
+behind interior compute instead of serializing in front of it, and the
+wire carries 2h values per shard per order instead of the full 2·nl
+block.  The measured exchange-round count (and hence the paper-level
+2K|E| message count) is unchanged; only the payload shrinks.
 
 The free functions (`dist_cheb_apply` etc.) are the stable low-level API;
 :func:`build` packages them into an :class:`~repro.dist.operator.ExecutionPlan`
@@ -62,6 +73,44 @@ class BandedPartition:
     @property
     def n_padded(self) -> int:
         return self.n_shards * self.n_local
+
+    @property
+    def halo(self) -> int:
+        """Coupling bandwidth h: boundary rows a neighbour actually reads
+        (the per-order exchange tile).  Computed once and memoized in the
+        instance __dict__ (the frozen-dataclass cache idiom)."""
+        h = self.__dict__.get("_halo")
+        if h is None:
+            h = _coupling_bandwidth(np.asarray(self.left),
+                                    np.asarray(self.right))
+            self.__dict__["_halo"] = h
+        return h
+
+    def boundary_couplings(self) -> Tuple[Array, Array]:
+        """(left, right) couplings trimmed to the h columns they read:
+        left: (S, nl, h) against neighbour s-1's *last* h rows; right:
+        (S, nl, h) against neighbour s+1's *first* h rows."""
+        h = self.halo
+        nl = self.n_local
+        return self.left[:, :, nl - h:], self.right[:, :, :h]
+
+
+def _coupling_bandwidth(left: np.ndarray, right: np.ndarray) -> int:
+    """Halo width h: how many boundary rows a neighbour actually reads.
+
+    `left[s]` couples shard s to the trailing columns of shard s-1 and
+    `right[s]` to the leading columns of shard s+1; h is the widest such
+    band over all shards (at least 1 so the exchange shapes stay static).
+    """
+    nl = left.shape[1]
+    h = 1
+    lc = np.nonzero(np.any(left != 0, axis=(0, 1)))[0]
+    if lc.size:
+        h = max(h, nl - int(lc.min()))
+    rc = np.nonzero(np.any(right != 0, axis=(0, 1)))[0]
+    if rc.size:
+        h = max(h, int(rc.max()) + 1)
+    return min(h, nl)
 
 
 def partition_banded(
@@ -124,28 +173,43 @@ def _vspec(ndim: int, axis: str) -> P:
 # ---------------------------------------------------------------------------
 # Local matvecs (run inside shard_map)
 # ---------------------------------------------------------------------------
-def _halo_matvec(diag, left, right, axis: str):
-    """Matvec along the *last* axis of x with one ring halo exchange.
+def _halo_matvec(diag, left, right, nl: int, h: int, axis: str):
+    """Interior/boundary-split matvec along the *last* axis of x.
 
-    x: (..., nl) local block. The permute indices form a ring; the first/last
-    shard's out-of-range contribution is killed by the zero left/right blocks
+    x: (..., nl) local block; left/right are the (nl, h) boundary
+    couplings from :meth:`BandedPartition.boundary_couplings`.  Per call:
+
+    1. **boundary tiles on the wire first** — the first/last h entries
+       ppermute to the ring neighbours (lines 6-7 of Algorithm 1);
+    2. **interior compute while the exchange is in flight** — the
+       diagonal-block product needs no remote data, so it overlaps the
+       collective under an async-collective scheduler;
+    3. **boundary coupling on arrival** — two (nl, h) products against
+       the received tiles.
+
+    The permute indices form a ring; the first/last shard's out-of-range
+    contribution is killed by the zero left/right coupling blocks
     (partition_banded leaves left[0] = right[-1] = 0).
     """
     size = jax.lax.axis_size(axis)
 
     def mv(x: Array) -> Array:
+        head = x[..., :h]
+        tail = x[..., nl - h:nl]
         if size > 1:
-            # lines 6-7 of Algorithm 1: exchange boundary state with neighbours
-            from_right = jax.lax.ppermute(
-                x, axis, perm=[(i, (i - 1) % size) for i in range(size)]
-            )
+            # (1) issue the boundary-tile exchange: shard s receives s-1's
+            # tail (read by `left`) and s+1's head (read by `right`)
             from_left = jax.lax.ppermute(
-                x, axis, perm=[(i, (i + 1) % size) for i in range(size)]
+                tail, axis, perm=[(i, (i + 1) % size) for i in range(size)]
+            )
+            from_right = jax.lax.ppermute(
+                head, axis, perm=[(i, (i - 1) % size) for i in range(size)]
             )
         else:
-            from_right = x
-            from_left = x
+            from_left, from_right = tail, head
+        # (2) interior: depends only on local data — overlaps the exchange
         y = jnp.einsum("ij,...j->...i", diag, x)
+        # (3) boundary: consumed after the interior product
         y = y + jnp.einsum("ij,...j->...i", left, from_left)
         y = y + jnp.einsum("ij,...j->...i", right, from_right)
         return y
@@ -176,6 +240,8 @@ def dist_cheb_apply(
     single = getattr(coeffs, "ndim", None) == 1 or (
         not hasattr(coeffs, "ndim") and np.asarray(coeffs).ndim == 1)
     c = jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype))
+    nl, h = parts.n_local, parts.halo
+    left_h, right_h = parts.boundary_couplings()
 
     @partial(
         shard_map,
@@ -185,10 +251,10 @@ def dist_cheb_apply(
         check_vma=False,
     )
     def run(diag, left, right, xl, c):
-        mv = _halo_matvec(diag[0], left[0], right[0], axis)
+        mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis)
         return cheb.cheb_apply(mv, xl, c, lmax)
 
-    out = run(parts.diag, parts.left, parts.right, x, c)
+    out = run(parts.diag, left_h, right_h, x, c)
     return out[..., 0, :] if single else out
 
 
@@ -204,16 +270,18 @@ def dist_cheb_apply_adjoint(
     (..., n_padded); one ppermute pair moves all eta streams (and every
     batch signal) per order."""
     c = jnp.asarray(coeffs, dtype=a.dtype)
+    nl, h = parts.n_local, parts.halo
+    left_h, right_h = parts.boundary_couplings()
 
     def run(diag, left, right, al, c):
-        mv = _halo_matvec(diag[0], left[0], right[0], axis)
+        mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis)
         return cheb.cheb_apply_adjoint(mv, al, c, lmax)
 
     return _sharded(
         run, mesh,
         (P(axis), P(axis), P(axis), _vspec(a.ndim, axis), P()),
         _vspec(a.ndim - 1, axis),
-    )(parts.diag, parts.left, parts.right, a, c)
+    )(parts.diag, left_h, right_h, a, c)
 
 
 def dist_cheb_apply_gram(
@@ -227,16 +295,18 @@ def dist_cheb_apply_gram(
     """Sharded Phi~*Phi~ x via product coefficients (Section IV-C).
     x: (..., n_padded) -> (..., n_padded)."""
     d = jnp.asarray(cheb.gram_coeffs(coeffs), dtype=x.dtype)
+    nl, h = parts.n_local, parts.halo
+    left_h, right_h = parts.boundary_couplings()
 
     def run(diag, left, right, xl, d):
-        mv = _halo_matvec(diag[0], left[0], right[0], axis)
+        mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis)
         return cheb.cheb_apply(mv, xl, d, lmax)
 
     return _sharded(
         run, mesh,
         (P(axis), P(axis), P(axis), _vspec(x.ndim, axis), P()),
         _vspec(x.ndim, axis),
-    )(parts.diag, parts.left, parts.right, x, d)
+    )(parts.diag, left_h, right_h, x, d)
 
 
 def dist_lasso(
@@ -265,9 +335,11 @@ def dist_lasso(
     c = jnp.asarray(coeffs, dtype=y.dtype)
     eta = c.shape[0]
     thresh = _mu_threshold(mu, eta, y.dtype, gamma)
+    nl, h = parts.n_local, parts.halo
+    left_h, right_h = parts.boundary_couplings()
 
     def run(diag, left, right, yl, c, thresh):
-        mv = _halo_matvec(diag[0], left[0], right[0], axis)
+        mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis)
         phi_y = cheb.cheb_apply(mv, yl, c, lmax)  # Alg. 3 line 3
 
         def body(a, _):
@@ -286,15 +358,19 @@ def dist_lasso(
         run, mesh,
         (P(axis), P(axis), P(axis), _vspec(y.ndim, axis), P(), P()),
         (_vspec(y.ndim + 1, axis), _vspec(y.ndim, axis)),
-    )(parts.diag, parts.left, parts.right, y, c, thresh)
+    )(parts.diag, left_h, right_h, y, c, thresh)
 
 
 def halo_bytes_per_apply(parts: BandedPartition, K: int, eta: int = 1,
                          dtype_bytes: int = 4) -> int:
     """Collective-traffic model for one sharded application: per Chebyshev
-    order each shard sends its block left+right (2 * nl * eta * bytes), K
-    rounds, n_shards shards. The TPU analog of the paper's 2K|E| messages."""
-    return 2 * K * parts.n_shards * parts.n_local * eta * dtype_bytes
+    order each shard sends its h-row boundary tile left+right
+    (2 * h * eta * bytes, h = the partition's coupling bandwidth), K
+    rounds, n_shards shards.  The TPU analog of the paper's 2K|E| message
+    bound — the interior/boundary split shrank the payload from the full
+    nl block to the h rows a neighbour actually reads, while the round
+    count (what the paper-level accounting measures) is unchanged."""
+    return 2 * K * parts.n_shards * parts.halo * eta * dtype_bytes
 
 
 # ---------------------------------------------------------------------------
@@ -329,6 +405,7 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
                 "allow_leak=True, or use backend='allgather'")
     parts = partition
     n = parts.n
+    nl, h = parts.n_local, parts.halo
     coeffs = op.coeffs
     lmax = op.lmax
 
@@ -374,11 +451,12 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
                                  out_sds)
 
         def run(diag, left, right, *rest):
-            mv = _halo_matvec(diag[0], left[0], right[0], axis)
+            mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis)
             return fn(mv, *rest)
 
+        left_h, right_h = parts.boundary_couplings()
         outs = _sharded(run, mesh, in_specs, out_specs)(
-            parts.diag, parts.left, parts.right, *padded, *consts)
+            parts.diag, left_h, right_h, *padded, *consts)
         return jax.tree.map(lambda o: o[..., :n], outs)
 
     return ExecutionPlan(
@@ -389,7 +467,13 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
         info={
             "mesh_axis": axis,
             "n_shards": n_shards,
+            "n_local": nl,
+            "halo_width": h,
             "partition_leak": leak,
-            "halo_bytes_per_apply": halo_bytes_per_apply(parts, op.K, op.eta),
+            # forward/gram ship an eta-independent (..., h) tile per order;
+            # only the adjoint's iterate carries the eta streams
+            "halo_bytes_per_apply": halo_bytes_per_apply(parts, op.K, 1),
+            "halo_bytes_per_adjoint": halo_bytes_per_apply(parts, op.K,
+                                                           op.eta),
         },
     )

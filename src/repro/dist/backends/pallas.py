@@ -2,11 +2,18 @@
 
 Converts the dense P once into the Block-ELL layout at plan time, then every
 application runs the fused recurrence (`kernels.ops.fused_cheb_apply`) — the
-hot path on TPU, interpret mode on CPU.  Signals are padded to the Block-ELL
-padded size internally and the padding is stripped from every output, so
-callers see the logical N everywhere.  Batched (..., N) signals hit the
-batched SpMV tile path: every Block-ELL block load is amortized across the
-batch, so B signals cost one structure sweep per order, not B.
+hot path on TPU, interpret mode on CPU.  By default the whole K-order
+recurrence dispatches to the single-launch persistent sweep
+(`kernels.cheb_sweep` via `ops.fused_cheb_sweep`): iterates pinned in VMEM
+across all orders, one kernel launch instead of 2K, guarded by the VMEM
+footprint model with a per-order fallback (pass ``sweep=False`` /
+``vmem_budget=`` at plan time to control it).  The plan's matvec is tagged
+with its Block-ELL structure, so `plan.solve`'s Jacobi/Chebyshev solvers
+ride the same one-launch sweep kernels.  Signals are padded to the
+Block-ELL padded size internally and the padding is stripped from every
+output, so callers see the logical N everywhere.  Batched (..., N) signals
+hit the batched SpMV tile path: every Block-ELL block load is amortized
+across the batch, so B signals cost one structure sweep per order, not B.
 """
 from __future__ import annotations
 
@@ -26,7 +33,8 @@ Array = jax.Array
 
 @register_backend("pallas")
 def build(op, *, mesh=None, partition=None, block: Tuple[int, int] = (8, 128),
-          use_pallas: Optional[bool] = True, **options):
+          use_pallas: Optional[bool] = True, sweep: Optional[bool] = None,
+          vmem_budget: Optional[int] = None, **options):
     from ..operator import ExecutionPlan
 
     del mesh, partition  # single-device backend
@@ -47,10 +55,17 @@ def build(op, *, mesh=None, partition=None, block: Tuple[int, int] = (8, 128),
         # ride one sweep of the sparsity structure
         return ops.spmv(A, t, use_pallas=use_pallas)
 
+    if sweep is None or sweep:
+        # tag the matvec so ops.fused_cheb_recurrence / plan.solve collapse
+        # whole iterations into the single-launch sweep kernels
+        _mv.block_ell = A
+        _mv.vmem_budget = vmem_budget
+
     def apply(f: Array) -> Array:
         c2 = np.atleast_2d(np.asarray(coeffs))
         out = ops.fused_cheb_apply(A, _pad(f), c2, lmax,
-                                   use_pallas=use_pallas)
+                                   use_pallas=use_pallas, sweep=sweep,
+                                   vmem_budget=vmem_budget)
         return out[..., :n]
 
     def apply_adjoint(a: Array) -> Array:
@@ -61,7 +76,8 @@ def build(op, *, mesh=None, partition=None, block: Tuple[int, int] = (8, 128),
     def apply_gram(f: Array) -> Array:
         d = cheb.gram_coeffs(coeffs)
         out = ops.fused_cheb_apply(A, _pad(f), d[None], lmax,
-                                   use_pallas=use_pallas)
+                                   use_pallas=use_pallas, sweep=sweep,
+                                   vmem_budget=vmem_budget)
         return out[..., 0, :n]
 
     def matvec_runner(fn, signals, consts=()):
@@ -84,5 +100,9 @@ def build(op, *, mesh=None, partition=None, block: Tuple[int, int] = (8, 128),
             "flops_per_matvec": (
                 None if nnz_blocks is None
                 else nnz_blocks * 2 * block[0] * block[1]),
+            "sweep_vmem_bytes": ops.cheb_sweep_vmem_bytes(
+                A, total, op.eta, op.K),
+            "sweep_vmem_budget": (ops.DEFAULT_SWEEP_VMEM_BUDGET
+                                  if vmem_budget is None else vmem_budget),
         },
     )

@@ -32,6 +32,18 @@ Communication per application: K orders x 2 ppermutes of an (h,)-block
 signals — the round count is batch-invariant, only the tile grows) —
 measurable with :mod:`repro.dist.commstats` and compared against the
 paper's closed form in ``benchmarks/bench_scaling.py``.
+
+Latency structure (docs/ARCHITECTURE.md "Perf accounting"): the per-order
+matvec is an explicit **interior/boundary split** — the boundary-tile
+ppermutes are issued first, the interior Block-ELL SpMV (no remote data)
+runs while they are in flight, and the received halo rows are applied on
+arrival, so the exchange hides behind interior compute instead of
+serializing in front of it.  The whole per-shard recurrence runs on the
+shard's Block-ELL padded domain (padded once on entry, cropped once on
+exit — no per-order pad/crop traffic), and on a 1-shard mesh, where the
+exchange is a no-op, the matvec is tagged for the single-launch
+`cheb_sweep` kernel so the entire K-order loop collapses into one
+`pallas_call`.
 """
 from __future__ import annotations
 
@@ -50,7 +62,8 @@ from ...core.lasso import soft_threshold
 from ...kernels import ops
 from ..sharding import ShardingRules, make_rules
 from . import register_backend
-from .halo import BandedPartition, pad_signal, partition_banded, _sharded
+from .halo import (BandedPartition, _coupling_bandwidth, _sharded,
+                   pad_signal, partition_banded)
 
 Array = jax.Array
 
@@ -99,24 +112,6 @@ class ShardedBlockELL:
         return int(np.asarray(self.mask).sum())
 
 
-def _coupling_bandwidth(left: np.ndarray, right: np.ndarray) -> int:
-    """Halo width h: how many boundary rows a neighbour actually reads.
-
-    `left[s]` couples shard s to the trailing columns of shard s-1 and
-    `right[s]` to the leading columns of shard s+1; h is the widest such
-    band over all shards (at least 1 so the exchange shapes stay static).
-    """
-    nl = left.shape[1]
-    h = 1
-    lc = np.nonzero(np.any(left != 0, axis=(0, 1)))[0]
-    if lc.size:
-        h = max(h, nl - int(lc.min()))
-    rc = np.nonzero(np.any(right != 0, axis=(0, 1)))[0]
-    if rc.size:
-        h = max(h, int(rc.max()) + 1)
-    return min(h, nl)
-
-
 def partition_block_ell(
     P_dense: np.ndarray,
     n_shards: int,
@@ -163,49 +158,68 @@ def partition_block_ell(
 # Per-shard matvec (runs inside shard_map)
 # ---------------------------------------------------------------------------
 def _halo_row_matvec(local_A: graphmod.BlockELL, left: Array, right: Array,
-                     nl: int, h: int, axis: str, use_pallas):
-    """Matvec along the last axis of x with a boundary-rows-only exchange.
+                     nl: int, h: int, axis: str, use_pallas,
+                     vmem_budget=None, n_shards=None):
+    """Interior/boundary-split matvec along the last axis of x.
 
-    x: (..., nl) local block.  Per call each shard ppermutes its first/last
-    h entries to its ring neighbours (the only inter-shard traffic — a
-    (..., h) boundary tile, so B batched signals ship (B, h) per direction
-    in the *same* exchange round), runs the Pallas Block-ELL SpMV on its
-    diagonal block (batched tile path: one structure sweep for the whole
-    batch), and applies the small dense boundary couplings to the received
-    halo rows.  The ring wraps; the first/last shard's out-of-range
-    contribution is killed by the zero left/right coupling blocks.
+    x: (..., pnl) local block on the shard's **Block-ELL padded domain**
+    (pnl = local_A.padded_n; callers pad once per application, not per
+    order — rows past nl are zero and stay zero).  left/right are the
+    boundary couplings row-padded to (pnl, h).  Per call:
+
+    1. **boundary tiles on the wire first** — each shard ppermutes its
+       first/last h *logical* entries to its ring neighbours (the only
+       inter-shard traffic — a (..., h) tile, so B batched signals ship
+       (B, h) per direction in the same exchange round);
+    2. **interior compute while the exchange is in flight** — the Pallas
+       Block-ELL SpMV over the shard's diagonal block reads no remote
+       data, so it overlaps the collective (batched tile path: one
+       structure sweep for the whole batch);
+    3. **boundary coupling on arrival** — two small (pnl, h) dense
+       products against the received halo rows.
+
+    The ring wraps; the first/last shard's out-of-range contribution is
+    killed by the zero left/right coupling blocks.  On a 1-shard mesh the
+    exchange is a no-op and the returned closure is tagged with
+    ``mv.block_ell`` so `ops.fused_cheb_recurrence` / the Section-V
+    solvers collapse the whole iteration into a single-launch sweep
+    kernel (the couplings are identically zero there).
     """
-    size = jax.lax.axis_size(axis)
-
-    def local_mv(v: Array) -> Array:
-        vp = ops.pad_trailing(v, local_A.padded_n)
-        return ops.spmv(local_A, vp, use_pallas=use_pallas)[..., :nl]
+    size = n_shards if n_shards is not None else jax.lax.axis_size(axis)
 
     def mv(x: Array) -> Array:
         head = x[..., :h]
-        tail = x[..., nl - h:]
+        tail = x[..., nl - h:nl]
         if size > 1:
-            # boundary-row exchange: shard s receives s-1's tail (read by
-            # `left`) and s+1's head (read by `right`)
+            # (1) boundary-row exchange: shard s receives s-1's tail (read
+            # by `left`) and s+1's head (read by `right`)
             from_left = jax.lax.ppermute(
                 tail, axis, perm=[(i, (i + 1) % size) for i in range(size)])
             from_right = jax.lax.ppermute(
                 head, axis, perm=[(i, (i - 1) % size) for i in range(size)])
         else:
             from_left, from_right = tail, head
-        y = local_mv(x)
+        # (2) interior Block-ELL SpMV — overlaps the exchange
+        y = ops.spmv(local_A, x, use_pallas=use_pallas)
+        # (3) boundary couplings on arrival
         y = y + jnp.einsum("ij,...j->...i", left, from_left)
         y = y + jnp.einsum("ij,...j->...i", right, from_right)
         return y
 
+    if size == 1:
+        mv.block_ell = local_A
+        mv.vmem_budget = vmem_budget
     return mv
 
 
 def pallas_halo_bytes_per_apply(parts: ShardedBlockELL, K: int, eta: int = 1,
                                 dtype_bytes: int = 4) -> int:
     """Collective-traffic model for one application: per order each shard
-    sends its h boundary rows left+right; K orders, S shards.  Contrast
-    `halo.halo_bytes_per_apply`, which ships the full nl block."""
+    sends its h boundary rows left+right; K orders, S shards.  Since the
+    interior/boundary split, `halo.halo_bytes_per_apply` follows the same
+    boundary-tile formula (it used to ship the full nl block); this one
+    reads the width off a `ShardedBlockELL`, that one off a
+    `BandedPartition`."""
     return 2 * K * parts.n_shards * parts.halo * eta * dtype_bytes
 
 
@@ -215,7 +229,8 @@ def pallas_halo_bytes_per_apply(parts: ShardedBlockELL, K: int, eta: int = 1,
 @register_backend("pallas_halo")
 def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
           allow_leak: bool = False, block: Tuple[int, int] = (8, 128),
-          use_pallas: Optional[bool] = None, **options):
+          use_pallas: Optional[bool] = None,
+          vmem_budget: Optional[int] = None, **options):
     """Build an ExecutionPlan running the fused Pallas Chebyshev recurrence
     per shard with boundary-row halo exchange.
 
@@ -223,7 +238,10 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
     precomputed `partition=` (a `ShardedBlockELL`, or a `halo.
     BandedPartition` which is converted).  Without `mesh=`, a 1-D "graph"
     mesh over every visible device is built.  `use_pallas` follows the
-    `kernels.ops` dispatch policy (None: native on TPU, jnp oracle on CPU).
+    `kernels.ops` dispatch policy (None: native on TPU, jnp oracle on CPU);
+    `vmem_budget` overrides the single-launch sweep kernel's VMEM guard
+    (`ops.DEFAULT_SWEEP_VMEM_BUDGET`) on 1-shard meshes, where the whole
+    per-shard recurrence collapses into one `cheb_sweep` launch.
     """
     from ..operator import ExecutionPlan
 
@@ -253,6 +271,13 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
         raise ValueError(f"partition has {parts.n_shards} shards but mesh "
                          f"axis {axis!r} has {n_shards}")
     n, nl, h = parts.n, parts.n_local, parts.halo
+    # the shard's Block-ELL padded domain: the whole recurrence runs here,
+    # padded once on entry and cropped once on exit (no per-order pads)
+    pnl = parts.blocks.shape[1] * parts.blocks.shape[3]
+    left_p = ops.pad_trailing(parts.left.swapaxes(-1, -2),
+                              pnl).swapaxes(-1, -2)
+    right_p = ops.pad_trailing(parts.right.swapaxes(-1, -2),
+                               pnl).swapaxes(-1, -2)
     coeffs = op.coeffs
     lmax = op.lmax
 
@@ -260,7 +285,35 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
         local_A = graphmod.BlockELL(blocks=blocks[0], indices=indices[0],
                                     mask=mask[0], n=nl)
         return _halo_row_matvec(local_A, left[0], right[0], nl, h, axis,
-                                use_pallas)
+                                use_pallas, vmem_budget, n_shards)
+
+    info = {
+        "mesh_axis": axis,
+        "n_shards": n_shards,
+        "n_local": nl,
+        "n_local_padded": pnl,
+        "halo_width": h,
+        "partition_leak": leak,
+        "block": block,
+        "nnz_blocks": parts.nnz_blocks,
+        "sweep_vmem_bytes": ops.cheb_sweep_vmem_bytes(
+            graphmod.BlockELL(blocks=parts.blocks[0],
+                              indices=parts.indices[0],
+                              mask=parts.mask[0], n=nl),
+            pnl, op.eta, op.K),
+        "halo_bytes_per_apply": pallas_halo_bytes_per_apply(parts, op.K, 1),
+        "halo_bytes_per_adjoint": pallas_halo_bytes_per_apply(
+            parts, op.K, op.eta),
+    }
+
+    if n_shards == 1:
+        # A 1-shard mesh needs no collectives and no shard_map: build the
+        # plan directly on the (concrete) local Block-ELL — the matvec's
+        # `block_ell` tag holds plan-time constants, so the single-launch
+        # sweep dispatch (and its eager-dense CPU oracle) engages exactly
+        # as in the `pallas` backend, minus the shard_map trace overhead.
+        return _build_single_shard(op, parts, pnl, left_p, right_p,
+                                   use_pallas, vmem_budget, info)
 
     # PartitionSpecs through the logical-axis rules: every per-shard tensor
     # is sharded on its leading "vertex"-block dimension.  The shared _BASE
@@ -271,7 +324,7 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
     rules = (make_rules(mesh) if axis == "graph"
              else ShardingRules(mapping={"vertex": axis}, mesh=mesh))
     vspec = rules.spec("vertex")
-    mats = (parts.blocks, parts.indices, parts.mask, parts.left, parts.right)
+    mats = (parts.blocks, parts.indices, parts.mask, left_p, right_p)
     mat_specs = (vspec,) * 5
 
     def _sig_spec(ndim: int) -> P:
@@ -280,8 +333,9 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
     def apply(f: Array) -> Array:
         def run(blocks, indices, mask, left, right, xl, c):
             mv = _mk_mv(blocks, indices, mask, left, right)
-            return ops.fused_cheb_recurrence(mv, xl, c, lmax,
-                                             use_pallas=use_pallas)
+            out = ops.fused_cheb_recurrence(mv, ops.pad_trailing(xl, pnl),
+                                            c, lmax, use_pallas=use_pallas)
+            return out[..., :nl]
 
         c2 = jnp.atleast_2d(jnp.asarray(coeffs, f.dtype))
         out = _sharded(run, mesh, mat_specs + (_sig_spec(f.ndim), P()),
@@ -293,7 +347,9 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
     def apply_adjoint(a: Array) -> Array:
         def run(blocks, indices, mask, left, right, al, c):
             mv = _mk_mv(blocks, indices, mask, left, right)
-            return cheb.cheb_apply_adjoint(mv, al, c, lmax)
+            out = cheb.cheb_apply_adjoint(mv, ops.pad_trailing(al, pnl),
+                                          c, lmax)
+            return out[..., :nl]
 
         c = jnp.asarray(coeffs, a.dtype)
         return _sharded(run, mesh, mat_specs + (_sig_spec(a.ndim), P()),
@@ -303,8 +359,9 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
     def apply_gram(f: Array) -> Array:
         def run(blocks, indices, mask, left, right, xl, d):
             mv = _mk_mv(blocks, indices, mask, left, right)
-            return ops.fused_cheb_recurrence(mv, xl, d, lmax,
-                                             use_pallas=use_pallas)[..., 0, :]
+            out = ops.fused_cheb_recurrence(mv, ops.pad_trailing(xl, pnl),
+                                            d, lmax, use_pallas=use_pallas)
+            return out[..., 0, :nl]
 
         d = jnp.asarray(cheb.gram_coeffs(coeffs), f.dtype)[None]
         return _sharded(run, mesh, mat_specs + (_sig_spec(f.ndim), P()),
@@ -316,8 +373,11 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
 
         def run(blocks, indices, mask, left, right, yl, c, thresh):
             mv = _mk_mv(blocks, indices, mask, left, right)
-            phi_y = ops.fused_cheb_recurrence(mv, yl, c, lmax,
-                                              use_pallas=use_pallas)
+            # the whole ISTA loop runs on the padded Block-ELL domain;
+            # padded rows stay identically zero (zero signal, zero blocks,
+            # zero couplings), cropped once on the way out
+            phi_y = ops.fused_cheb_recurrence(mv, ops.pad_trailing(yl, pnl),
+                                              c, lmax, use_pallas=use_pallas)
 
             def body(a, _):
                 back = cheb.cheb_apply_adjoint(mv, a, c, lmax)
@@ -329,7 +389,7 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
             a0 = jnp.zeros_like(phi_y)
             a_star, _ = jax.lax.scan(body, a0, None, length=n_iters)
             y_star = cheb.cheb_apply_adjoint(mv, a_star, c, lmax)
-            return a_star, y_star
+            return a_star[..., :nl], y_star[..., :nl]
 
         c = jnp.asarray(coeffs, y.dtype)
         thresh = _mu_threshold(mu, op.eta, y.dtype, gamma)
@@ -345,14 +405,20 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
         # the per-shard Block-ELL matvec with boundary-rows-only halo
         # exchange — a solver round costs the same 2·h-row traffic as one
         # Chebyshev order.  Vertex-last signals shard (zero-padded tails
-        # stay zero under the solvers' reciprocal-diagonal updates);
-        # consts replicate; outputs crop to the logical n.
+        # stay zero under the solvers' reciprocal-diagonal updates) and are
+        # lifted to the shard's Block-ELL padded domain once per call, so
+        # the iteration bodies run pad-free; every output's vertex axis is
+        # cropped per shard, then to the logical n.  On a 1-shard mesh the
+        # matvec carries its `block_ell` tag, so eligible solver bodies
+        # collapse into the single-launch sweep kernels.
         padded = tuple(pad_signal(jnp.asarray(s), parts) for s in signals)
         local = tuple(
-            jax.ShapeDtypeStruct(s.shape[:-1] + (nl,), s.dtype)
+            jax.ShapeDtypeStruct(s.shape[:-1] + (pnl,), s.dtype)
             for s in padded)
-        out_sds = jax.eval_shape(lambda *a: fn(lambda v: v, *a),
-                                 *local, *consts)
+        out_sds = jax.eval_shape(
+            lambda *a: jax.tree.map(
+                lambda o: o[..., :nl], fn(lambda v: v, *a)),
+            *local, *consts)
         in_specs = (mat_specs
                     + tuple(_sig_spec(s.ndim) for s in padded)
                     + tuple(P() for _ in consts))
@@ -361,7 +427,9 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
 
         def run(blocks, indices, mask, left, right, *rest):
             mv = _mk_mv(blocks, indices, mask, left, right)
-            return fn(mv, *rest)
+            sigs = tuple(ops.pad_trailing(s, pnl) for s in rest[:len(padded)])
+            outs = fn(mv, *sigs, *rest[len(padded):])
+            return jax.tree.map(lambda o: o[..., :nl], outs)
 
         outs = _sharded(run, mesh, in_specs, out_specs)(
             *mats, *padded, *consts)
@@ -372,19 +440,78 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
         apply=apply, apply_adjoint=apply_adjoint, apply_gram=apply_gram,
         solve_lasso_fn=solve_lasso,
         matvec_runner=matvec_runner,
-        info={
-            "mesh_axis": axis,
-            "n_shards": n_shards,
-            "n_local": nl,
-            "halo_width": h,
-            "partition_leak": leak,
-            "block": block,
-            "nnz_blocks": parts.nnz_blocks,
-            "halo_bytes_per_apply": pallas_halo_bytes_per_apply(
-                parts, op.K, 1),
-            "halo_bytes_per_adjoint": pallas_halo_bytes_per_apply(
-                parts, op.K, op.eta),
-        },
+        info=info,
+    )
+
+
+def _build_single_shard(op, parts, pnl, left_p, right_p, use_pallas,
+                        vmem_budget, info):
+    """The 1-shard degenerate of the pallas_halo plan: same partition, same
+    matvec (the zero boundary couplings included, so `plan.info` and the
+    byte models stay comparable), but no shard_map and a concrete
+    Block-ELL — the single-launch sweep path of `kernels.ops` applies."""
+    from ...core.lasso import LassoResult, _mu_threshold
+    from ..operator import ExecutionPlan
+
+    n, nl, h = parts.n, parts.n_local, parts.halo
+    coeffs = op.coeffs
+    lmax = op.lmax
+    local_A = graphmod.BlockELL(blocks=parts.blocks[0],
+                                indices=parts.indices[0],
+                                mask=parts.mask[0], n=nl)
+    mv = _halo_row_matvec(local_A, left_p[0], right_p[0], nl, h,
+                          info["mesh_axis"], use_pallas, vmem_budget,
+                          n_shards=1)
+
+    def _pad(x):
+        return ops.pad_trailing(jnp.asarray(x), pnl)
+
+    def apply(f: Array) -> Array:
+        c2 = jnp.atleast_2d(jnp.asarray(coeffs, f.dtype))
+        out = ops.fused_cheb_recurrence(mv, _pad(f), c2, lmax,
+                                        use_pallas=use_pallas)
+        return out[..., :n]
+
+    def apply_adjoint(a: Array) -> Array:
+        c = jnp.asarray(coeffs, a.dtype)
+        return cheb.cheb_apply_adjoint(mv, _pad(a), c, lmax)[..., :n]
+
+    def apply_gram(f: Array) -> Array:
+        d = jnp.asarray(cheb.gram_coeffs(coeffs), f.dtype)[None]
+        out = ops.fused_cheb_recurrence(mv, _pad(f), d, lmax,
+                                        use_pallas=use_pallas)
+        return out[..., 0, :n]
+
+    def solve_lasso(y, mu, gamma, n_iters):
+        c = jnp.asarray(coeffs, y.dtype)
+        thresh = _mu_threshold(mu, op.eta, y.dtype, gamma)
+        phi_y = ops.fused_cheb_recurrence(mv, _pad(y), c, lmax,
+                                          use_pallas=use_pallas)
+
+        def body(a, _):
+            back = cheb.cheb_apply_adjoint(mv, a, c, lmax)
+            gram_a = ops.fused_cheb_recurrence(mv, back, c, lmax,
+                                               use_pallas=use_pallas)
+            a_new = soft_threshold(a + gamma * (phi_y - gram_a), thresh)
+            return a_new, None
+
+        a_star, _ = jax.lax.scan(body, jnp.zeros_like(phi_y), None,
+                                 length=n_iters)
+        y_star = cheb.cheb_apply_adjoint(mv, a_star, c, lmax)
+        return LassoResult(coeffs=a_star[..., :n], signal=y_star[..., :n],
+                           objective=jnp.nan, n_iters=n_iters, fused=True)
+
+    def matvec_runner(fn, signals, consts=()):
+        padded = tuple(_pad(s) for s in signals)
+        outs = fn(mv, *padded, *consts)
+        return jax.tree.map(lambda o: o[..., :n], outs)
+
+    return ExecutionPlan(
+        op=op, backend="pallas_halo",
+        apply=apply, apply_adjoint=apply_adjoint, apply_gram=apply_gram,
+        solve_lasso_fn=solve_lasso,
+        matvec_runner=matvec_runner,
+        info=info,
     )
 
 

@@ -16,7 +16,9 @@ what a compiled plan actually does instead of trusting the closed form:
   * :class:`CommStats` converts the tally into the two accountings used
     throughout the repo:
       - **device level** — collectives / bytes actually crossing the mesh
-        per application (what `plan.info`'s ``*_bytes_per_apply`` models);
+        per application (what `plan.info`'s ``*_bytes_per_apply`` models;
+        both halo backends ship only the h-row boundary tile per direction
+        per order — :attr:`CommStats.bytes_per_round` exposes it);
       - **paper level** — :meth:`CommStats.paper_messages`, the sensor-
         network message count ``rounds x 2|E|`` where `rounds` is the
         measured number of neighbour-exchange rounds.  For a faithful
@@ -110,6 +112,19 @@ class CommStats:
     def bytes_per_shard(self) -> int:
         """Payload bytes one shard sends per application."""
         return sum(c.count * c.nbytes for c in self.collectives)
+
+    @property
+    def bytes_per_round(self) -> float:
+        """Average payload bytes one shard ships per exchange round.
+
+        The device-level view of the interior/boundary split: the halo
+        backends should measure ``2 * h * dtype_bytes`` here (both
+        directions of one boundary-tile exchange, h = coupling bandwidth)
+        regardless of K — the per-order payload is what shrank, the round
+        count (the paper-level accounting) is untouched.
+        """
+        r = self.exchange_rounds
+        return self.bytes_per_shard / r if r else 0.0
 
     @property
     def total_bytes(self) -> int:

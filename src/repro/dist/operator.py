@@ -43,7 +43,9 @@ class ExecutionPlan:
     `apply` / `apply_adjoint` / `apply_gram` are jit-compatible closures with
     the uniform signatures documented on :class:`GraphOperator`.  `info`
     carries backend-specific cost metadata (halo bytes, Block-ELL occupancy,
-    ...) for benchmarks and dashboards.
+    ...) for benchmarks and dashboards.  Serving loops should call the
+    memoized :meth:`compiled` / :meth:`compiled_solve` wrappers instead of
+    re-wrapping the closures in `jax.jit` per request.
     """
 
     op: UnionMultiplier
@@ -64,6 +66,69 @@ class ExecutionPlan:
     #: Backends that leave it None fall back to the single-device reference
     #: matvec in `plan.solve` (logged at INFO).
     matvec_runner: Optional[Callable] = None
+
+    # compiled-callable memoization ----------------------------------------
+    def _jit_cache(self) -> Dict[Any, Any]:
+        """Per-plan memo for jitted callables (frozen-dataclass __dict__
+        idiom, like the operator's coefficient cache)."""
+        return self.__dict__.setdefault("_compiled", {})
+
+    def compiled(self, kind: str = "apply") -> Callable[[Array], Array]:
+        """Memoized `jax.jit`-wrapped plan method for serving loops.
+
+        ``plan.compiled("apply")`` returns THE SAME jit wrapper on every
+        call, so repeated serving requests hit jax's per-(shape, dtype)
+        trace cache instead of retracing — the failure mode of writing
+        ``jax.jit(plan.apply)`` afresh per request, which builds a new
+        wrapper (and a new empty cache) every time.  kind: ``"apply"`` |
+        ``"apply_adjoint"`` | ``"apply_gram"``.
+        """
+        fns = {"apply": self.apply, "apply_adjoint": self.apply_adjoint,
+               "apply_gram": self.apply_gram}
+        if kind not in fns:
+            raise KeyError(f"unknown kind {kind!r}; available: "
+                           f"{sorted(fns)}")
+        cache = self._jit_cache()
+        if kind not in cache:
+            cache[kind] = jax.jit(fns[kind])
+        return cache[kind]
+
+    def compiled_solve(self, method: str = "chebyshev", **solve_kwargs):
+        """Memoized jitted Section-V solver: ``y -> x`` (or ``(x, history)``
+        with ``history=True``).
+
+        Keyed per (method, solver kwargs); shapes/dtypes are handled by
+        jax's own jit cache, so a serving loop calling
+        ``plan.compiled_solve("jacobi", tau=0.5)(y)`` pays the numpy solve
+        setup and the trace once per signature.  Array-valued kwargs
+        (``den_diag=``, explicit ``poles=``) key by value (bytes), so two
+        plans solving different systems never share a cache entry — which
+        also means every `compiled_solve` *lookup* re-hashes those arrays:
+        hold the returned callable in the request loop rather than calling
+        ``compiled_solve(...)`` per request when passing large arrays.
+        """
+        import numpy as np
+
+        def _key(v):
+            if isinstance(v, (list, tuple)):
+                return tuple(_key(x) for x in v)
+            if hasattr(v, "shape") or isinstance(v, np.ndarray):
+                a = np.asarray(v)
+                return (a.shape, str(a.dtype), a.tobytes())
+            return v
+
+        key = ("solve", method) + tuple(
+            (k, _key(v)) for k, v in sorted(solve_kwargs.items()))
+        cache = self._jit_cache()
+        if key not in cache:
+            history = bool(solve_kwargs.get("history", False))
+
+            def run(y):
+                res = self.solve(y, method, **solve_kwargs)
+                return (res.x, res.history) if history else res.x
+
+            cache[key] = jax.jit(run)
+        return cache[key]
 
     # mirrored operator metadata -------------------------------------------
     @property

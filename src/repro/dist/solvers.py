@@ -40,6 +40,14 @@ boundary-only exchanges of one matvec — measured, not assumed, by
 :func:`repro.dist.commstats.solve_comm_stats`.  Backends without a runner
 (out-of-tree registrations) fall back to the single-device reference
 matvec, logged at INFO.
+
+Single-launch fast path: a runner matvec tagged with ``mv.block_ell``
+(a purely local Block-ELL product — `pallas`; `pallas_halo` on one
+shard) collapses a whole Jacobi / accelerated-Jacobi solve into ONE
+`kernels.cheb_sweep.jacobi_sweep` kernel launch (the Chebyshev method
+rides the same upgrade inside `ops.fused_cheb_recurrence`), VMEM-guarded
+with a logged per-round fallback — see docs/ARCHITECTURE.md "Perf
+accounting".
 """
 from __future__ import annotations
 
@@ -382,12 +390,38 @@ def _solve_jacobi(plan, runner, y, num, den, K, method, rho, den_diag, x0,
     signals = [y, inv_d] + ([x0] if x0 is not None else [])
 
     def fn(mv, yl, inv_dl, *rest):
+        from ..kernels import ops as kops
+
         x0l = rest[0] if rest else None
+        b = poly_matvec(mv, num, yl)
+        # Single-launch upgrade: a matvec tagged with its local Block-ELL
+        # structure (pallas backend; pallas_halo on a 1-shard mesh) runs
+        # the whole Eq. (24)/(25) iteration — deg(den) in-kernel SpMVs +
+        # the fused update per round — in ONE jacobi_sweep launch, the
+        # weight schedule computed host-side.  History recording needs the
+        # per-round iterates in HBM, so it stays on the per-round path.
+        A_local = getattr(mv, "block_ell", None)
+        if A_local is not None and not history:
+            if K * deg_den > 256:
+                # the in-kernel round loop unrolls the Horner chain; past
+                # this many SpMVs the trace/compile cost outweighs the
+                # launch savings — logged like every other fallback
+                logger.info(
+                    "solve[%s]: %d rounds x %d matvecs exceeds the "
+                    "single-launch unroll budget (256) — running the "
+                    "per-round jacobi_step path", method, K, deg_den)
+            else:
+                ws = (_jacobi.cheb_jacobi_weights(rho, K)
+                      if method == "cheb_jacobi"
+                      else _jacobi.jacobi_weights(K))
+                return kops.fused_jacobi_sweep(
+                    A_local, b, inv_dl, den, ws, x0=x0l,
+                    use_pallas=use_pallas,
+                    vmem_budget=getattr(mv, "vmem_budget", None))
 
         def a_mv(x):
             return poly_matvec(mv, den, x)
 
-        b = poly_matvec(mv, num, yl)
         if method == "jacobi":
             return _jacobi.jacobi_solve(
                 a_mv, None, b, K, x0=x0l, return_history=history,

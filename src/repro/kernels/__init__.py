@@ -2,10 +2,11 @@
 from . import ops, ref
 from .bcsr_spmv import block_ell_spmv
 from .cheb_step import cheb_step
+from .cheb_sweep import cheb_sweep, jacobi_sweep
 from .flash_attention import flash_attention
 from .soft_threshold import ista_shrink
 
 __all__ = [
-    "ops", "ref", "block_ell_spmv", "cheb_step", "flash_attention",
-    "ista_shrink",
+    "ops", "ref", "block_ell_spmv", "cheb_step", "cheb_sweep",
+    "jacobi_sweep", "flash_attention", "ista_shrink",
 ]

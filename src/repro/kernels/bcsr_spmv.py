@@ -17,6 +17,14 @@ out (ncb, bc, B) so each slot performs a single (br, bc) x (bc, B) MXU
 product, amortizing every Block-ELL block load (and every index gather)
 across the whole batch instead of re-walking the structure per signal as a
 `jax.vmap` of the vector kernel would.
+
+These kernels are one *launch per matvec*: an order-K recurrence pays K
+launches plus the `cheb_step` AXPYs in between.  `cheb_sweep` streams the
+same (blocks, indices) layout through its in-kernel SpMV
+(`cheb_sweep._spmv_into` gathers the identical (B, bc) iterate tiles by
+scalar-prefetched column index) so the whole recurrence runs in one
+launch; this module stays the per-matvec primitive for sharded matvecs
+whose orders are separated by halo exchanges.
 """
 from __future__ import annotations
 

@@ -6,8 +6,13 @@ One order of Algorithm 1 after the sparse matvec `pt = P @ t_{k-1}`:
     acc_j += c_{j,k} * t_k   for every multiplier j       (line 12 running sum)
 
 Fusing the AXPYs keeps the iterate traffic at one HBM round-trip per order
-instead of four (the memory-bound part of the recurrence; see EXPERIMENTS.md
-§Perf for the accounting).
+instead of four (the memory-bound part of the recurrence; see
+docs/ARCHITECTURE.md "Perf accounting" for the full model).  The next rung
+on that ladder is `cheb_sweep.cheb_sweep`, which collapses the K per-order
+launches into ONE persistent kernel with the iterates pinned in VMEM —
+this per-order kernel remains the fallback when the sweep's VMEM-footprint
+guard trips, and the per-shard step for sharded matvecs that carry
+collectives.
 
 Halo-aware tiling: the kernel is also the per-shard recurrence step of the
 `pallas_halo` backend, where it runs inside a shard_map on each shard's

@@ -1,0 +1,249 @@
+"""Single-launch persistent Chebyshev / Jacobi sweep Pallas kernels.
+
+The per-order hot path (`bcsr_spmv.block_ell_spmv` + `cheb_step.cheb_step`)
+launches two kernels per Chebyshev order and round-trips the iterates
+``t_k, t_{k-1}, acc`` through HBM between them: O(K * (3 + eta) * n)
+iterate traffic for a K-order union.  The sweep kernels here move the
+order loop *inside* the kernel body instead:
+
+  * `cheb_sweep` — the full Algorithm-1 recurrence as ONE `pallas_call`.
+    A `lax.fori_loop` over the K orders runs in-kernel; ``t_k / t_{k-1}``
+    and the SpMV product live in VMEM scratch across all orders, the
+    accumulator is the (VMEM-resident) output ref, and the Block-ELL
+    blocks + per-order coefficients stream through.  Iterate HBM traffic
+    drops to one load (x) + one store (acc) per application, and kernel
+    launches from 2K to 1.
+  * `jacobi_sweep` — the Section-V analog: a whole (accelerated-)Jacobi
+    solve of ``den(P) x = b`` in one launch, the Horner evaluation of
+    ``den(P) x`` (deg(den) in-kernel SpMVs) and the Eq. (24)/(25) update
+    fused per round, iterates pinned in VMEM for all ``n_iters`` rounds.
+
+Everything must fit in VMEM at once — iterates, accumulator, and the
+Block-ELL structure — so the `kernels.ops` dispatchers guard on the
+``(3 + eta) * B * n * 4 bytes + blocks`` footprint and fall back to the
+per-order kernels when the budget is exceeded (see
+``docs/ARCHITECTURE.md`` "Perf accounting" for the full model, and
+`ops.fused_cheb_sweep` / `ops.fused_jacobi_sweep` for the dispatch).
+
+Layout notes: coefficients ride in order-major ``(K+1, eta)`` so the
+in-kernel dynamic index is on the leading (sublane) axis; the Block-ELL
+column indices are scalar-prefetched exactly as in `bcsr_spmv`, so the
+in-kernel SpMV gathers ``(B, bc)`` iterate tiles with `pl.ds` dynamic
+slices and hits them with the same ``(B, bc) x (bc, br)``-shaped products
+as the batched per-order kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _spmv_into(idx_ref, blocks_ref, src_ref, dst_ref, *, nrb: int, slots: int,
+               br: int, bc: int) -> None:
+    """In-kernel Block-ELL SpMV: dst <- A @ src along the last axis.
+
+    src_ref / dst_ref: (B, n) VMEM refs (n = nrb * br = ncb * bc).  Each
+    row block accumulates its slot products in registers and stores once;
+    padded slots hold zero blocks, so they contribute nothing.
+    """
+    B = src_ref.shape[0]
+
+    def row_body(rb, _):
+        def slot_body(s, acc_row):
+            col = idx_ref[rb, s]
+            blk = blocks_ref[rb, s]                      # (br, bc)
+            xb = pl.load(src_ref, (slice(None), pl.ds(col * bc, bc)))
+            return acc_row + jax.lax.dot_general(
+                xb, blk, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        acc_row = jax.lax.fori_loop(0, slots, slot_body,
+                                    jnp.zeros((B, br), jnp.float32))
+        pl.store(dst_ref, (slice(None), pl.ds(rb * br, br)),
+                 acc_row.astype(dst_ref.dtype))
+        return 0
+
+    jax.lax.fori_loop(0, nrb, row_body, 0)
+
+
+def _cheb_sweep_kernel(idx_ref, coef_ref, blocks_ref, x_ref, acc_ref,
+                       t1_ref, t0_ref, pt_ref, *, K: int, alpha: float,
+                       nrb: int, slots: int, br: int, bc: int):
+    spmv = functools.partial(_spmv_into, idx_ref, blocks_ref,
+                             nrb=nrb, slots=slots, br=br, bc=bc)
+    x = x_ref[...]                                       # (B, n)
+    # order 0: acc = (c_0 / 2) x                         (Algorithm 1 line 4)
+    acc_ref[...] = 0.5 * coef_ref[0][None, :, None] * x[:, None, :]
+    # order 1: t_1 = (P x) / alpha - x                   (line 5)
+    spmv(x_ref, pt_ref)
+    t1 = pt_ref[...] / alpha - x
+    t0_ref[...] = x
+    t1_ref[...] = t1
+    acc_ref[...] = acc_ref[...] + coef_ref[1][None, :, None] * t1[:, None, :]
+
+    def order_body(k, _):
+        # t_k = (2/alpha) P t_{k-1} - 2 t_{k-1} - t_{k-2}     (line 9)
+        spmv(t1_ref, pt_ref)
+        tk = ((2.0 / alpha) * pt_ref[...] - 2.0 * t1_ref[...] - t0_ref[...])
+        ck = pl.load(coef_ref, (pl.ds(k, 1), slice(None)))[0]     # (eta,)
+        acc_ref[...] = acc_ref[...] + ck[None, :, None] * tk[:, None, :]
+        t0_ref[...] = t1_ref[...]
+        t1_ref[...] = tk
+        return 0
+
+    jax.lax.fori_loop(2, K + 1, order_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "interpret"))
+def cheb_sweep(
+    blocks: Array,
+    indices: Array,
+    x: Array,
+    coeffs: Array,
+    *,
+    alpha: float,
+    interpret: bool = False,
+) -> Array:
+    """Full K-order shifted-Chebyshev recurrence in one kernel launch.
+
+    blocks/indices: Block-ELL structure as in `bcsr_spmv.block_ell_spmv`.
+    x: (..., n) with n the Block-ELL padded size (n = nrb * br); leading
+    batch dims flatten to one VMEM-resident (B, n) iterate that advances
+    through all orders without touching HBM.  coeffs: (eta, K+1), K >= 1.
+    Returns (..., eta, n) — the same contract as the per-order path
+    (`ops.fused_cheb_apply`), whose `cheb_step` docs and the
+    ``docs/ARCHITECTURE.md`` "Perf accounting" section give the HBM
+    round-trip model this kernel collapses.
+    """
+    nrb, slots, br, bc = blocks.shape
+    n = x.shape[-1]
+    eta, K1 = coeffs.shape
+    batch_shape = x.shape[:-1]
+    B = x.size // n
+    x2 = x.reshape(B, n)
+    coefsT = jnp.asarray(coeffs, x.dtype).T              # (K+1, eta)
+
+    kernel = functools.partial(
+        _cheb_sweep_kernel, K=K1 - 1, alpha=float(alpha),
+        nrb=nrb, slots=slots, br=br, bc=bc)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((K1, eta), lambda g, idx: (0, 0)),
+            pl.BlockSpec((nrb, slots, br, bc), lambda g, idx: (0, 0, 0, 0)),
+            pl.BlockSpec((B, n), lambda g, idx: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, eta, n), lambda g, idx: (0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((B, n), jnp.float32),             # t_{k-1}
+            pltpu.VMEM((B, n), jnp.float32),             # t_{k-2}
+            pltpu.VMEM((B, n), jnp.float32),             # P t_{k-1}
+        ],
+    )
+    acc = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, eta, n), x.dtype),
+        interpret=interpret,
+    )(indices, coefsT, blocks, x2)
+    return acc.reshape(batch_shape + (eta, n))
+
+
+def _jacobi_sweep_kernel(idx_ref, ws_ref, blocks_ref, b_ref, invd_ref,
+                         x0_ref, x_ref, xp_ref, q_ref, h_ref,
+                         *, n_iters: int, den: Tuple[float, ...],
+                         nrb: int, slots: int, br: int, bc: int):
+    spmv = functools.partial(_spmv_into, idx_ref, blocks_ref,
+                             nrb=nrb, slots=slots, br=br, bc=bc)
+    x_ref[...] = x0_ref[...]
+    xp_ref[...] = x0_ref[...]
+
+    def round_body(t, _):
+        x = x_ref[...]
+        # den(P) x by Horner: deg(den) in-kernel SpMVs, coefficients baked
+        # in as compile-time constants (the rational spec is host-known)
+        h_ref[...] = den[-1] * x
+        for c in den[-2::-1]:
+            spmv(h_ref, q_ref)
+            h_ref[...] = q_ref[...] + c * x
+        wt = pl.load(ws_ref, (pl.ds(t, 1), slice(None)))[0]       # (2,)
+        # x_next = w (x + D^{-1}(b - den(P) x)) - s x_prev   (Eq. (24)/(25))
+        x_next = (wt[0] * (x + invd_ref[...] * (b_ref[...] - h_ref[...]))
+                  - wt[1] * xp_ref[...])
+        xp_ref[...] = x
+        x_ref[...] = x_next
+        return 0
+
+    jax.lax.fori_loop(0, n_iters, round_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("den", "interpret"))
+def jacobi_sweep(
+    blocks: Array,
+    indices: Array,
+    b: Array,
+    inv_d: Array,
+    weights: Array,
+    x0: Array,
+    *,
+    den: Tuple[float, ...],
+    interpret: bool = False,
+) -> Array:
+    """Whole (accelerated-)Jacobi solve of den(P) x = b in one launch.
+
+    b / x0: (..., n) at the Block-ELL padded size; inv_d broadcastable to
+    them (zeros on padded rows keep those rows exactly zero, the repo-wide
+    zero-padding convention).  weights: (n_iters, 2) per-round (w_t, s_t)
+    schedule — all (1, 0) for plain Jacobi (Eq. (24)),
+    `core.jacobi.cheb_jacobi_weights` for Eq. (25).  den: monomial
+    coefficients of the split polynomial, low-degree-first (static).
+    Returns x after n_iters rounds, shape (..., n).
+    """
+    nrb, slots, br, bc = blocks.shape
+    n = b.shape[-1]
+    batch_shape = jnp.broadcast_shapes(b.shape, x0.shape)[:-1]
+    full = batch_shape + (n,)
+    B = 1
+    for d in batch_shape:
+        B *= d
+    b2 = jnp.broadcast_to(b, full).reshape(B, n)
+    invd2 = jnp.broadcast_to(inv_d, full).reshape(B, n)
+    x02 = jnp.broadcast_to(x0, full).reshape(B, n)
+    ws = jnp.asarray(weights, b.dtype)
+    n_iters = ws.shape[0]
+
+    kernel = functools.partial(
+        _jacobi_sweep_kernel, n_iters=n_iters,
+        den=tuple(float(c) for c in den),
+        nrb=nrb, slots=slots, br=br, bc=bc)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n_iters, 2), lambda g, idx: (0, 0)),
+            pl.BlockSpec((nrb, slots, br, bc), lambda g, idx: (0, 0, 0, 0)),
+            pl.BlockSpec((B, n), lambda g, idx: (0, 0)),
+            pl.BlockSpec((B, n), lambda g, idx: (0, 0)),
+            pl.BlockSpec((B, n), lambda g, idx: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, n), lambda g, idx: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((B, n), jnp.float32),             # x_prev
+            pltpu.VMEM((B, n), jnp.float32),             # SpMV product
+            pltpu.VMEM((B, n), jnp.float32),             # Horner accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, n), b2.dtype),
+        interpret=interpret,
+    )(indices, ws, blocks, b2, invd2, x02)
+    return out.reshape(full)

@@ -8,7 +8,11 @@ with ``w = 1, s = 0`` the plain Jacobi sweep (Eq. (24)) and the per-
 iteration Chebyshev-accelerated weights of Eq. (25) otherwise.  Fusing the
 five elementwise reads/writes into one pass keeps the iterate traffic at a
 single HBM round-trip per solver round — the same treatment `cheb_step`
-gives the Section-IV recurrence, extended to the Section-V solvers.
+gives the Section-IV recurrence, extended to the Section-V solvers (see
+docs/ARCHITECTURE.md "Perf accounting").  As with `cheb_step`, the
+single-launch `cheb_sweep.jacobi_sweep` kernel subsumes this one when the
+whole solve fits in VMEM; this per-round kernel is the guard fallback and
+the collective-bearing sharded path.
 
 Tiling mirrors `cheb_step`: iterates are zero-padded to the 128 lane width,
 leading batch dims flatten into a grid axis (one kernel launch advances the

@@ -17,10 +17,21 @@ with a halo-exchanging matvec over the per-shard Block-ELL tiles, so the
 same fused Chebyshev-step kernel serves both the single-device and the
 sharded hot path (per-shard sizes need not be 128-multiples — `cheb_step`
 pads its tiles internally).
+
+Single-launch sweep dispatch: when the matvec is a *local* Block-ELL
+product (no collectives — the `pallas` backend always, `pallas_halo` on a
+1-shard mesh), the backend tags its matvec closure with ``mv.block_ell``
+and :func:`fused_cheb_recurrence` upgrades the whole K-order loop to the
+persistent `cheb_sweep` kernel: one launch, iterates pinned in VMEM
+across all orders.  The upgrade is guarded by the VMEM footprint model
+:func:`cheb_sweep_vmem_bytes` — oversized problems fall back to the
+per-order path, logged at INFO (see docs/ARCHITECTURE.md "Perf
+accounting").
 """
 from __future__ import annotations
 
-from typing import Optional, Union
+import logging
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,11 +41,18 @@ from ..core.graph import BlockELL
 from . import ref
 from .bcsr_spmv import block_ell_spmv, block_ell_spmv_batched
 from .cheb_step import cheb_step
+from .cheb_sweep import cheb_sweep, jacobi_sweep
 from .jacobi_step import jacobi_step
 from .flash_attention import flash_attention as _flash
 from .soft_threshold import ista_shrink
 
 Array = jax.Array
+
+logger = logging.getLogger(__name__)
+
+#: Default VMEM budget for the single-launch sweep kernels: ~16 MB/core on
+#: current TPUs, minus headroom for the compiler's own buffers.
+DEFAULT_SWEEP_VMEM_BUDGET = 12 * 1024 * 1024
 
 
 def _on_tpu() -> bool:
@@ -68,6 +86,79 @@ def spmv(A: BlockELL, x: Array, use_pallas: Optional[bool] = None) -> Array:
     return ref.block_ell_spmv_ref(A.blocks, A.indices, x)
 
 
+def cheb_sweep_vmem_bytes(A: BlockELL, n: int, eta: int, K: int,
+                          batch: int = 1, itemsize: int = 4) -> int:
+    """VMEM footprint model for one `cheb_sweep` launch.
+
+    Everything the persistent sweep pins on-chip at once: the three
+    iterates (t_{k-1}, t_{k-2}, P t_{k-1}), the (eta, n) accumulator and
+    the x operand — the ``(3 + eta) * B * n * 4B`` term (+ one more B*n
+    for x) — plus the streamed Block-ELL structure and the (K+1, eta)
+    coefficient table.  `ops.fused_cheb_sweep` compares this against its
+    budget (default :data:`DEFAULT_SWEEP_VMEM_BUDGET`) and falls back to
+    the per-order path when it does not fit.
+    """
+    iterates = (3 + eta) * batch * n * itemsize
+    operand = batch * n * itemsize
+    structure = (int(np.prod(A.blocks.shape)) * itemsize
+                 + int(np.prod(A.indices.shape)) * 4)
+    table = (K + 1) * eta * itemsize
+    return iterates + operand + structure + table
+
+
+def _per_order_cheb(A: BlockELL, x: Array, coeffs: Array, lmax: float,
+                    use_pallas: Optional[bool]) -> Array:
+    """Per-order fallback: one SpMV + one `cheb_step` launch per order."""
+
+    def mv(t):
+        return spmv(A, t, use_pallas=use_pallas)
+
+    return _cheb_recurrence_loop(mv, x, coeffs, lmax, use_pallas)
+
+
+def fused_cheb_sweep(
+    A: BlockELL,
+    x: Array,
+    coeffs: Union[Array, np.ndarray],
+    lmax: float,
+    use_pallas: Optional[bool] = None,
+    vmem_budget: Optional[int] = None,
+) -> Array:
+    """Phi_tilde x with the single-launch persistent sweep.
+
+    x: (..., padded_n) at A's Block-ELL padded size; coeffs: (eta, K+1)
+    (or (K+1,)).  Returns (..., eta, padded_n).  On the kernel path the
+    whole K-order recurrence is ONE `pallas_call` (`kernels.cheb_sweep`)
+    with iterates pinned in VMEM, guarded by
+    :func:`cheb_sweep_vmem_bytes` against `vmem_budget` (default
+    :data:`DEFAULT_SWEEP_VMEM_BUDGET`) — oversized problems fall back to
+    the per-order `cheb_step` path (logged at INFO).  The reference path
+    runs `ref.cheb_sweep_ref`, the same recurrence as one unrolled trace.
+    """
+    use, interp = _resolve(use_pallas)
+    c = jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype))
+    eta, K1 = c.shape
+    K = K1 - 1
+    alpha = float(lmax) / 2.0
+    if use:
+        budget = DEFAULT_SWEEP_VMEM_BUDGET if vmem_budget is None \
+            else int(vmem_budget)
+        n = x.shape[-1]
+        batch = max(1, x.size // n)
+        need = cheb_sweep_vmem_bytes(A, n, eta, K, batch)
+        if K < 2:
+            return _per_order_cheb(A, x, c, lmax, use_pallas)
+        if need > budget:
+            logger.info(
+                "cheb_sweep: VMEM footprint %d B exceeds budget %d B "
+                "(n=%d, eta=%d, K=%d, B=%d) — falling back to the "
+                "per-order cheb_step path", need, budget, n, eta, K, batch)
+            return _per_order_cheb(A, x, c, lmax, use_pallas)
+        return cheb_sweep(A.blocks, A.indices, x, c, alpha=alpha,
+                          interpret=interp)
+    return ref.cheb_sweep_ref(A.blocks, A.indices, x, c, alpha=alpha)
+
+
 def fused_cheb_recurrence(
     matvec,
     x: Array,
@@ -84,12 +175,39 @@ def fused_cheb_recurrence(
     `pallas_halo` backend passes a halo-exchanging matvec and runs this
     whole function inside a shard_map, where `x` is the per-shard block.
 
+    Single-launch upgrade: a matvec tagged with ``mv.block_ell = A`` (a
+    purely local Block-ELL product, no collectives) routes the whole loop
+    to :func:`fused_cheb_sweep` — one kernel launch for all K orders,
+    VMEM-guarded with a per-order fallback.  The `pallas` backend tags its
+    matvec always; `pallas_halo` only on a 1-shard mesh, where the halo
+    exchange is a no-op.  An optional ``mv.vmem_budget`` overrides the
+    sweep budget.
+
     x: (..., n) — any n; `cheb_step` pads its tiles to the 128 lane width
     internally, and leading batch dims take the batched tile paths (one
     structure sweep / kernel launch per order for the whole batch).
     coeffs: (eta, K+1) (or (K+1,), treated as eta=1).
     Returns (..., eta, n).
     """
+    A_local = getattr(matvec, "block_ell", None)
+    if A_local is not None:
+        n_logical = x.shape[-1]
+        out = fused_cheb_sweep(
+            A_local, pad_trailing(x, A_local.padded_n), coeffs, lmax,
+            use_pallas=use_pallas,
+            vmem_budget=getattr(matvec, "vmem_budget", None))
+        return out[..., :n_logical]
+    return _cheb_recurrence_loop(matvec, x, coeffs, lmax, use_pallas)
+
+
+def _cheb_recurrence_loop(
+    matvec,
+    x: Array,
+    coeffs: Union[Array, np.ndarray],
+    lmax: float,
+    use_pallas: Optional[bool] = None,
+) -> Array:
+    """The per-order recurrence loop (one matvec + one fused step/order)."""
     use, interp = _resolve(use_pallas)
     c = jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype))
     K = c.shape[1] - 1
@@ -124,6 +242,9 @@ def fused_cheb_apply(
     coeffs: Union[Array, np.ndarray],
     lmax: float,
     use_pallas: Optional[bool] = None,
+    *,
+    sweep: Optional[bool] = None,
+    vmem_budget: Optional[int] = None,
 ) -> Array:
     """Phi_tilde x with the SpMV + fused-step kernels (Algorithm 1 on TPU).
 
@@ -131,12 +252,18 @@ def fused_cheb_apply(
     padded_n works (the fused step kernel pads its tiles to the 128 lane
     width internally) and leading batch dims share the K structure sweeps.
     Returns (..., eta, padded_n).
+
+    sweep: None (default) routes through the single-launch
+    :func:`fused_cheb_sweep` (which itself guards on the VMEM budget and
+    falls back to the per-order path); False forces the per-order
+    SpMV + `cheb_step` loop — the benchmark baseline.
     """
-
-    def mv(t):
-        return spmv(A, t, use_pallas=use_pallas)
-
-    return fused_cheb_recurrence(mv, x, coeffs, lmax, use_pallas=use_pallas)
+    if sweep is None or sweep:
+        return fused_cheb_sweep(A, x, coeffs, lmax, use_pallas=use_pallas,
+                                vmem_budget=vmem_budget)
+    return _per_order_cheb(
+        A, x, jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype)), lmax,
+        use_pallas)
 
 
 def flash_attention(
@@ -187,6 +314,85 @@ def jacobi_update(
         return jacobi_step(qx, x, x_prev, y, inv_d, w=w, s=s,
                            interpret=interp)
     return ref.jacobi_step_ref(qx, x, x_prev, y, inv_d, w=w, s=s)
+
+
+def jacobi_sweep_vmem_bytes(A: BlockELL, n: int, batch: int = 1,
+                            itemsize: int = 4) -> int:
+    """VMEM footprint model for one `jacobi_sweep` launch: x, x_prev, the
+    SpMV product, the Horner accumulator, b and D^{-1} (six pinned (B, n)
+    buffers) plus the streamed Block-ELL structure."""
+    buffers = 6 * batch * n * itemsize
+    structure = (int(np.prod(A.blocks.shape)) * itemsize
+                 + int(np.prod(A.indices.shape)) * 4)
+    return buffers + structure
+
+
+def fused_jacobi_sweep(
+    A: BlockELL,
+    b: Array,
+    inv_d: Array,
+    den: Sequence[float],
+    weights,
+    *,
+    x0: Optional[Array] = None,
+    use_pallas: Optional[bool] = None,
+    vmem_budget: Optional[int] = None,
+) -> Array:
+    """Whole (accelerated-)Jacobi solve of den(P) x = b, one launch.
+
+    The Section-V counterpart of :func:`fused_cheb_sweep`: all n_iters
+    rounds of Eq. (24)/(25) — deg(den) Block-ELL SpMVs per round (Horner)
+    plus the fused five-operand update — run inside one `jacobi_sweep`
+    kernel with the iterates pinned in VMEM.  b / x0: (..., n) at any n
+    (padded to A's Block-ELL size internally, cropped on return); inv_d
+    broadcastable, zeros on padded/virtual rows.  weights: (n_iters, 2)
+    host-side (w_t, s_t) schedule (`core.jacobi.jacobi_weights` /
+    `cheb_jacobi_weights`).  The same VMEM-budget guard and per-order
+    fallback (one `jacobi_step` launch per round, logged at INFO) as the
+    Chebyshev sweep apply.
+    """
+    use, interp = _resolve(use_pallas)
+    n_logical = b.shape[-1]
+    total = A.padded_n
+    bp = pad_trailing(jnp.asarray(b), total)
+    invdp = pad_trailing(jnp.asarray(inv_d), total)
+    x0p = (jnp.zeros_like(bp) if x0 is None
+           else pad_trailing(jnp.asarray(x0), total))
+    den = tuple(float(c) for c in den)
+    ws = np.asarray(weights, dtype=np.float64)
+
+    if use:
+        budget = DEFAULT_SWEEP_VMEM_BUDGET if vmem_budget is None \
+            else int(vmem_budget)
+        batch = max(1, bp.size // total)
+        need = jacobi_sweep_vmem_bytes(A, total, batch)
+        if need > budget:
+            logger.info(
+                "jacobi_sweep: VMEM footprint %d B exceeds budget %d B "
+                "(n=%d, B=%d) — falling back to the per-round jacobi_step "
+                "path", need, budget, total, batch)
+        else:
+            out = jacobi_sweep(A.blocks, A.indices, bp, invdp, ws, x0p,
+                               den=den, interpret=interp)
+            return out[..., :n_logical]
+        # per-round fallback: one SpMV chain + one fused update per round
+
+        def body(carry, ws_row):
+            x, x_prev = carry
+            h = den[-1] * x
+            for c in den[-2::-1]:
+                h = spmv(A, h, use_pallas=use_pallas) + c * x
+            x_next = jacobi_update(h, x, x_prev, bp, invdp,
+                                   w=ws_row[0], s=ws_row[1],
+                                   use_pallas=use_pallas)
+            return (x_next, x), None
+
+        (x_final, _), _ = jax.lax.scan(
+            body, (x0p, x0p), jnp.asarray(ws, bp.dtype))
+        return x_final[..., :n_logical]
+    out = ref.jacobi_sweep_ref(A.blocks, A.indices, bp, invdp, ws, x0p,
+                               den=den)
+    return out[..., :n_logical]
 
 
 def ista_update(

@@ -25,6 +25,98 @@ def cheb_step_ref(pt: Array, t_km1: Array, t_km2: Array, acc: Array,
     return tk, acc + coef[:, None] * tk[..., None, :]
 
 
+#: Above this padded size the sweep oracles keep the gather-based Block-ELL
+#: matvec instead of densifying (n^2 memory).
+_DENSE_SWEEP_MAX_N = 4096
+
+
+def block_ell_to_dense(blocks, indices) -> Array:
+    """Reassemble the dense (padded_n, padded_n) matrix from Block-ELL.
+
+    Padded slots must hold zero blocks (they scatter zeros).  Used by the
+    sweep oracles below: the structure arrays are plan-time constants, so
+    for concrete inputs the scatter runs eagerly in numpy at trace time
+    and the sweep's matvecs become plain dense products against a literal
+    matrix — on CPU several times faster than the per-order gather+einsum,
+    which is tuned for the TPU kernel's streaming layout, not for host
+    execution."""
+    import numpy as np
+
+    nrb, slots, br, bc = blocks.shape
+    n = nrb * br
+    if not isinstance(blocks, jax.core.Tracer) and \
+            not isinstance(indices, jax.core.Tracer):
+        bl = np.asarray(blocks)
+        ix = np.asarray(indices)
+        dense = np.zeros((n, n), bl.dtype)
+        for rb in range(nrb):
+            for s in range(slots):
+                cb = int(ix[rb, s])
+                dense[rb * br:(rb + 1) * br, cb * bc:(cb + 1) * bc] += \
+                    bl[rb, s]
+        return jnp.asarray(dense)
+    one_hot = jax.nn.one_hot(indices, n // bc, dtype=blocks.dtype)
+    return jnp.einsum("rsij,rsc->ricj", blocks, one_hot).reshape(n, n)
+
+
+def _sweep_matvec(blocks, indices):
+    """The sweep oracles' matvec: dense when small enough, gather otherwise."""
+    n = blocks.shape[0] * blocks.shape[2]
+    if n <= _DENSE_SWEEP_MAX_N:
+        dense = block_ell_to_dense(blocks, indices)
+        return lambda v: jnp.einsum("ij,...j->...i", dense, v)
+    return lambda v: block_ell_spmv_ref(blocks, indices, v)
+
+
+def cheb_sweep_ref(blocks: Array, indices: Array, x: Array, coeffs: Array,
+                   *, alpha: float) -> Array:
+    """Whole K-order recurrence as one fused jnp computation (the
+    `cheb_sweep` oracle): the order loop is unrolled host-side (K is
+    static), so XLA sees a single straight-line trace with no per-order
+    scan machinery, and the matvec densifies at small n
+    (:func:`block_ell_to_dense`) — the CPU analog of the single-launch
+    kernel.
+
+    x: (..., n) at the Block-ELL padded size; coeffs: (eta, K+1).
+    Returns (..., eta, n)."""
+    c = jnp.asarray(coeffs, x.dtype)
+    mv = _sweep_matvec(blocks, indices)
+    K = c.shape[1] - 1
+    t0 = x
+    acc = 0.5 * c[:, 0:1] * x[..., None, :]
+    if K == 0:
+        return acc
+    t1 = mv(x) / alpha - x
+    acc = acc + c[:, 1:2] * t1[..., None, :]
+    for k in range(2, K + 1):
+        pt = mv(t1)
+        tk = (2.0 / alpha) * pt - 2.0 * t1 - t0
+        acc = acc + c[:, k:k + 1] * tk[..., None, :]
+        t0, t1 = t1, tk
+    return acc
+
+
+def jacobi_sweep_ref(blocks: Array, indices: Array, b: Array, inv_d: Array,
+                     weights, x0: Array, *, den) -> Array:
+    """Whole (accelerated-)Jacobi solve of den(P) x = b, rounds unrolled
+    (the `jacobi_sweep` oracle).  weights: (n_iters, 2) host-side (w_t,
+    s_t) schedule; den: monomial coefficients, low-first.  Returns x after
+    n_iters rounds, shape broadcast(b, x0)."""
+    import numpy as np
+
+    ws = np.asarray(weights, dtype=np.float64)
+    mv = _sweep_matvec(blocks, indices)
+    x, x_prev = x0, x0
+    for t in range(ws.shape[0]):
+        h = den[-1] * x
+        for c in den[-2::-1]:
+            h = mv(h) + c * x
+        x_next = jacobi_step_ref(h, x, x_prev, b, inv_d,
+                                 w=float(ws[t, 0]), s=float(ws[t, 1]))
+        x, x_prev = x_next, x
+    return x
+
+
 def jacobi_step_ref(qx: Array, x: Array, x_prev: Array, y: Array,
                     inv_d: Array, *, w, s) -> Array:
     """One (accelerated-)Jacobi update x_next = w (x + D^{-1}(y - Qx)) - s x_prev.
