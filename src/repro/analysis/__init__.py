@@ -1,0 +1,57 @@
+"""Static-analysis subsystem: jaxpr invariant checks + repo AST lint.
+
+Two layers guard the invariants PRs 1–5 accumulated (the 2K|E| comm
+schedule, VMEM-budgeted sweep launches, batch-invariant collective
+schedules, f32 hot paths, logged fallbacks, fenced-off legacy scaffold):
+
+* :mod:`repro.analysis.checks` — trace-level checks over plan methods,
+  built on the reusable jaxpr visitor in :mod:`repro.analysis.jaxpr_walk`
+  (the walker `dist.commstats` is rebased on).  Rule IDs ``JX-*``.
+* :mod:`repro.analysis.astlint` — stdlib AST lint over `src/repro`.
+  Rule IDs ``RP-*``.
+
+Findings (:class:`Finding`) carry file:line, a stable rule ID and the
+enclosing symbol; :class:`Allowlist` (`tools/lint_allowlist.txt`) records
+every tolerated violation with a mandatory justification.  The CLI entry
+point is ``tools/lint_repro.py --check`` (CI's `lint` job); the rule
+catalogue lives in ARCHITECTURE.md ("Static invariants").
+"""
+from .astlint import AST_RULES, lint_file, lint_source, lint_tree
+from .checks import (JAXPR_RULES, check_batch_schedule, check_comm_schedule,
+                     check_dtype_discipline, check_plan, check_vmem_budget,
+                     collective_schedule, pallas_footprint, perm_problems)
+from .findings import (AllowEntry, Allowlist, AllowlistError, Finding,
+                       ScaffoldEntry)
+from .jaxpr_walk import (COLLECTIVE_PRIMITIVES, EqnContext, collect_eqns,
+                         eqn_payload, source_location, subjaxprs, walk_jaxpr)
+
+ALL_RULES = JAXPR_RULES + AST_RULES
+
+__all__ = [
+    "ALL_RULES",
+    "AST_RULES",
+    "AllowEntry",
+    "Allowlist",
+    "AllowlistError",
+    "COLLECTIVE_PRIMITIVES",
+    "EqnContext",
+    "Finding",
+    "JAXPR_RULES",
+    "ScaffoldEntry",
+    "check_batch_schedule",
+    "check_comm_schedule",
+    "check_dtype_discipline",
+    "check_plan",
+    "check_vmem_budget",
+    "collect_eqns",
+    "collective_schedule",
+    "eqn_payload",
+    "lint_file",
+    "lint_source",
+    "lint_tree",
+    "pallas_footprint",
+    "perm_problems",
+    "source_location",
+    "subjaxprs",
+    "walk_jaxpr",
+]

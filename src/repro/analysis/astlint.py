@@ -1,0 +1,284 @@
+"""Repo-specific AST lint rules over `src/repro` (analysis Layer 2).
+
+Grown from the `tools/check_docs.py` idiom — stdlib-only static passes
+that encode decisions this repo already made, so they stop regressing
+silently:
+
+* ``RP-DENSE-MAT`` — no dense materialization on library paths: calls to
+  ``eigh`` (the O(N^3)/O(N^2)-memory eigendecomposition the paper exists
+  to avoid) or ``block_ell_to_dense`` belong only in `kernels/ref.py` and
+  explicitly allowlisted oracle paths (the spectral-bound oracle in
+  `core/multiplier.py`).
+* ``RP-ORDER-LOOP`` — no Python-level loop over Chebyshev orders
+  (``for ... in range(.. K ..)``) outside `kernels/ref.py`: the order
+  recurrence must run inside `lax.scan`/the fused sweep kernel, or it
+  unrolls into K copies of the matvec at trace time (the exact failure
+  PR 5's single-launch sweep removed).
+* ``RP-HOST-SYNC`` — no ``device_get`` / ``block_until_ready`` in library
+  code: host syncs belong to benchmarks and tests, never inside plan
+  methods where they serialize the dispatch pipeline.
+* ``RP-FALLBACK-LOG`` — every dispatch fallback logs before taking the
+  slow path: an ``if`` branch that calls a fallback implementation
+  (``_per_order_*``, ``_fallback*``, ``*_recurrence_loop``, ``ref.*`` /
+  ``*_ref``, the generic ``distributed_lasso`` loop) must also emit a
+  ``logger.info``/``logger.warning`` in that same branch, so benchmarks
+  can't silently misattribute the slow path (the repo-wide policy PR 4/5
+  established one call site at a time).
+* ``RP-LEGACY-SCAFFOLD`` — the dormant LM-scaffolding modules (the
+  ``[scaffold]`` section of `tools/lint_allowlist.txt`: `models/`, the
+  LLM config presets, `kernels/flash_attention.py`, the `launch/`
+  driver) must not be imported from hot-path library code.  Scaffold
+  modules may import each other freely.
+
+Findings carry file:line + the enclosing function as ``symbol``, so
+allowlist entries pin to ``path::function`` and survive line drift.
+`lint_tree` walks a source root; `tools/lint_repro.py --check` is the
+entry point that applies `tools/lint_allowlist.txt`.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+import os
+import re
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from .findings import Finding
+
+#: Rule IDs of the AST layer (catalogued in ARCHITECTURE.md).
+AST_RULES = (
+    "RP-DENSE-MAT",
+    "RP-ORDER-LOOP",
+    "RP-HOST-SYNC",
+    "RP-FALLBACK-LOG",
+    "RP-LEGACY-SCAFFOLD",
+)
+
+#: Files where the dense/order-loop reference idioms are the point.
+REF_PATHS = ("src/repro/kernels/ref.py",)
+
+_DENSE_CALLS = {"eigh", "block_ell_to_dense"}
+_HOST_SYNC_CALLS = {"device_get", "block_until_ready"}
+_FALLBACK_NAME = re.compile(
+    r"(^_per_order_|^_fallback|_recurrence_loop$|^distributed_lasso$|_ref$)")
+_LOG_METHODS = {"info", "warning"}
+
+
+def _norm(path: str) -> str:
+    return path.replace(os.sep, "/")
+
+
+def _call_name(node: ast.Call) -> Tuple[str, Optional[str]]:
+    """(terminal name, attribute base dotted-or-None) of a call target."""
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id, None
+    if isinstance(f, ast.Attribute):
+        base = f.value
+        parts = []
+        while isinstance(base, ast.Attribute):
+            parts.append(base.attr)
+            base = base.value
+        if isinstance(base, ast.Name):
+            parts.append(base.id)
+        return f.attr, ".".join(reversed(parts)) or None
+    return "", None
+
+
+def _is_scaffold(relpath: str, scaffold_globs: Sequence[str]) -> bool:
+    p = _norm(relpath)
+    return any(fnmatch.fnmatch(p, g) for g in scaffold_globs)
+
+
+def _resolve_import(module: Optional[str], level: int, alias: str,
+                    file_relpath: str, src_root: str) -> Optional[str]:
+    """Repo-relative path a (possibly relative) import resolves to.
+
+    Handles ``import a.b``, ``from a.b import c`` and relative forms
+    (``from . import ops``, ``from .flash_attention import f``); returns
+    the module file (or package ``__init__.py``) path relative to the
+    repo root, or None when the target is not a file under `src_root`
+    (external package, or a symbol rather than a submodule).
+    """
+    if level:
+        base = os.path.dirname(file_relpath)
+        for _ in range(level - 1):
+            base = os.path.dirname(base)
+        parts = [base] + (module.split(".") if module else [])
+    else:
+        if not module:
+            parts = []
+        else:
+            parts = [src_root] + module.split(".")
+    for candidate_parts in ([*parts, alias] if alias else [], parts):
+        if not candidate_parts:
+            continue
+        stem = os.path.join(*candidate_parts)
+        for suffix in (".py", os.path.join("", "__init__.py")):
+            p = stem + suffix if suffix == ".py" \
+                else os.path.join(stem, "__init__.py")
+            if os.path.isfile(p):
+                return _norm(p)
+    return None
+
+
+class _Visitor(ast.NodeVisitor):
+    """Single-pass rule visitor with an enclosing-function stack."""
+
+    def __init__(self, relpath: str, src_root: str,
+                 scaffold_globs: Sequence[str]):
+        self.relpath = _norm(relpath)
+        self.src_root = src_root
+        self.scaffold_globs = tuple(scaffold_globs)
+        self.is_ref = self.relpath in REF_PATHS
+        self.is_scaffold = _is_scaffold(self.relpath, scaffold_globs)
+        self.findings: List[Finding] = []
+        self._funcs: List[str] = []
+
+    # -- bookkeeping --------------------------------------------------------
+    @property
+    def symbol(self) -> str:
+        return self._funcs[-1] if self._funcs else ""
+
+    def _add(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(
+            rule=rule, path=self.relpath, line=getattr(node, "lineno", 0),
+            symbol=self.symbol, message=message))
+
+    def visit_FunctionDef(self, node):
+        self._funcs.append(node.name)
+        self.generic_visit(node)
+        self._funcs.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- RP-LEGACY-SCAFFOLD -------------------------------------------------
+    def _check_import(self, node, module: Optional[str], level: int,
+                      alias: str) -> None:
+        if self.is_scaffold:
+            return
+        target = _resolve_import(module, level, alias, self.relpath,
+                                 self.src_root)
+        if target and _is_scaffold(target, self.scaffold_globs):
+            self._add("RP-LEGACY-SCAFFOLD", node,
+                      f"imports audited legacy scaffold `{target}` from "
+                      "non-scaffold library code — the scaffold modules "
+                      "are fenced off the graph-filter hot path")
+
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            self._check_import(node, a.name, 0, "")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        for a in node.names:
+            self._check_import(node, node.module, node.level, a.name)
+        self.generic_visit(node)
+
+    # -- RP-DENSE-MAT / RP-HOST-SYNC ---------------------------------------
+    def visit_Call(self, node: ast.Call):
+        name, _base = _call_name(node)
+        if name in _DENSE_CALLS and not self.is_ref:
+            self._add("RP-DENSE-MAT", node,
+                      f"dense materialization `{name}(...)` outside "
+                      "kernels/ref.py — O(N^2) memory defeats the "
+                      "distributed Chebyshev path")
+        if name in _HOST_SYNC_CALLS:
+            self._add("RP-HOST-SYNC", node,
+                      f"host sync `{name}(...)` in library code — "
+                      "serializes the dispatch pipeline; belongs in "
+                      "benchmarks/tests only")
+        self.generic_visit(node)
+
+    # -- RP-ORDER-LOOP ------------------------------------------------------
+    def visit_For(self, node: ast.For):
+        if not self.is_ref and isinstance(node.iter, ast.Call):
+            name, _ = _call_name(node.iter)
+            if name == "range" and any(
+                    isinstance(n, ast.Name) and n.id == "K"
+                    for a in node.iter.args for n in ast.walk(a)):
+                self._add("RP-ORDER-LOOP", node,
+                          "Python loop over Chebyshev orders (range over "
+                          "K) outside kernels/ref.py — unrolls K matvecs "
+                          "at trace time; use lax.scan or the fused "
+                          "sweep kernel")
+        self.generic_visit(node)
+
+    # -- RP-FALLBACK-LOG ----------------------------------------------------
+    @staticmethod
+    def _suite_fallback_calls(stmts: Iterable[ast.stmt]) -> List[ast.Call]:
+        calls = []
+        for stmt in stmts:
+            for n in ast.walk(stmt):
+                if not isinstance(n, ast.Call):
+                    continue
+                name, base = _call_name(n)
+                if _FALLBACK_NAME.search(name) or base == "ref":
+                    calls.append(n)
+        return calls
+
+    @staticmethod
+    def _has_log(stmts: Iterable[ast.stmt]) -> bool:
+        for stmt in stmts:
+            for n in ast.walk(stmt):
+                if isinstance(n, ast.Call):
+                    name, base = _call_name(n)
+                    if name in _LOG_METHODS and base \
+                            and base.split(".")[-1] in ("logger", "logging"):
+                        return True
+        return False
+
+    def visit_If(self, node: ast.If):
+        if not self.is_ref:
+            for suite in (node.body, node.orelse):
+                # an `elif` arm is a nested If in orelse; it gets its own
+                # visit, so skip the wrapper suite to avoid double counts
+                if len(suite) == 1 and isinstance(suite[0], ast.If):
+                    continue
+                calls = self._suite_fallback_calls(suite)
+                if calls and not self._has_log(suite):
+                    name, _ = _call_name(calls[0])
+                    self._add("RP-FALLBACK-LOG", calls[0],
+                              f"dispatch branch takes fallback `{name}` "
+                              "without a logger.info/logger.warning in "
+                              "the branch — slow paths must announce "
+                              "themselves")
+        self.generic_visit(node)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+def lint_source(source: str, relpath: str, src_root: str = "src",
+                scaffold_globs: Sequence[str] = ()) -> List[Finding]:
+    """Lint one module's source text (fixture-friendly entry point).
+
+    Scaffold modules (matching `scaffold_globs`) are skipped wholesale:
+    they are dormant, audited legacy code — the rule that concerns them is
+    ``RP-LEGACY-SCAFFOLD`` *in their importers*, not their own internals.
+    """
+    if _is_scaffold(relpath, scaffold_globs):
+        return []
+    tree = ast.parse(source, filename=relpath)
+    visitor = _Visitor(relpath, src_root, scaffold_globs)
+    visitor.visit(tree)
+    return visitor.findings
+
+
+def lint_file(path: str, src_root: str = "src",
+              scaffold_globs: Sequence[str] = ()) -> List[Finding]:
+    with open(path, encoding="utf-8") as fh:
+        return lint_source(fh.read(), _norm(path), src_root, scaffold_globs)
+
+
+def lint_tree(root: str = "src/repro", src_root: str = "src",
+              scaffold_globs: Sequence[str] = ()) -> List[Finding]:
+    """Lint every ``.py`` under `root`, sorted for stable CI output."""
+    findings: List[Finding] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for fname in sorted(filenames):
+            if fname.endswith(".py"):
+                findings += lint_file(os.path.join(dirpath, fname),
+                                      src_root, scaffold_globs)
+    return findings

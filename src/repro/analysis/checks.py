@@ -1,0 +1,338 @@
+"""Jaxpr-level invariant checks over traced plan methods (analysis Layer 1).
+
+Three families, each guarding an invariant PRs 1–5 established but until
+now only re-verified where a test author remembered to assert it:
+
+* **Comm-schedule safety** (:func:`check_comm_schedule`) —
+  ``JX-PPERMUTE-BIJECTION``: every ``ppermute`` permutation is a complete
+  bijection on its mesh axis.  A partial or colliding permutation is a
+  latent deadlock / silent-zero: on real interconnects every device must
+  both send and receive exactly once per exchange, and jax zero-fills
+  devices nobody sends to — either way the 2K|E| accounting breaks.
+  ``JX-COLLECTIVE-IN-WHILE``: no collective may sit under ``while_loop``,
+  whose trip count is unknown at trace time — the static schedule (and
+  `commstats.measure`, which now raises on this) cannot count it.
+* **Batch invariance** (:func:`collective_schedule` compared across batch
+  sizes; ``JX-BATCH-SCHEDULE``) — the (..., N) contract promises B signals
+  share the K exchange rounds.  Statically: the *ordered* collective
+  schedule (primitive, axis, permutation, trip multiplier) traced at B=1
+  must equal the one traced at B=64.  Payload shapes legitimately scale
+  with B and are excluded.
+* **VMEM budget** (:func:`check_vmem_budget`; ``JX-VMEM-BUDGET``) — every
+  ``pallas_call`` in the trace has its block + scratch footprint
+  recomputed from its BlockSpecs and asserted under the PR-5 sweep budget
+  (`repro.kernels.ops.DEFAULT_SWEEP_VMEM_BUDGET` unless overridden), so
+  no future kernel ships an unguarded launch.
+* **Dtype discipline** (:func:`check_dtype_discipline`) —
+  ``JX-DTYPE-F64``: no f64 values appear on hot paths (an accidental
+  ``astype(float64)`` doubles every halo payload and falls off the fast
+  unit paths); ``JX-DTYPE-PROMOTION``: no op silently mixes real floating
+  widths (e.g. a bf16 constant meeting f32 state promotes the whole
+  recurrence).  Complex dtypes are exempt — the ARMA solver mixes
+  complex64 poles with f32 signals by design.
+
+:func:`check_plan` bundles all of the above for one `ExecutionPlan`;
+`tools/lint_repro.py` runs it across every registered backend.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from .findings import Finding
+from .jaxpr_walk import (COLLECTIVE_PRIMITIVES, EqnContext, collect_eqns,
+                         source_location, walk_jaxpr)
+
+#: Rule IDs of the jaxpr layer (catalogued in ARCHITECTURE.md).
+JAXPR_RULES = (
+    "JX-PPERMUTE-BIJECTION",
+    "JX-COLLECTIVE-IN-WHILE",
+    "JX-BATCH-SCHEDULE",
+    "JX-VMEM-BUDGET",
+    "JX-DTYPE-F64",
+    "JX-DTYPE-PROMOTION",
+)
+
+
+def _finding(rule: str, eqn, label: str, message: str) -> Finding:
+    path, line = source_location(eqn)
+    return Finding(rule=rule, path=path or label, line=line, symbol=label,
+                   message=message)
+
+
+# ---------------------------------------------------------------------------
+# Comm-schedule safety
+# ---------------------------------------------------------------------------
+def perm_problems(perm: Sequence[Tuple[int, int]],
+                  axis_size: int) -> List[str]:
+    """Why `perm` is not a complete bijection on a size-`axis_size` axis.
+
+    Returns [] for a deadlock-free permutation: every device sends exactly
+    once, receives exactly once, and all indices are on-axis.  This is the
+    pure core of ``JX-PPERMUTE-BIJECTION`` — unit-testable without a mesh.
+    """
+    problems: List[str] = []
+    pairs = [(int(s), int(d)) for s, d in perm]
+    srcs = [s for s, _ in pairs]
+    dsts = [d for _, d in pairs]
+    off = [i for i in srcs + dsts if not 0 <= i < axis_size]
+    if off:
+        problems.append(f"indices {sorted(set(off))} outside axis of size "
+                        f"{axis_size}")
+    if len(set(srcs)) != len(srcs):
+        dup = sorted({s for s in srcs if srcs.count(s) > 1})
+        problems.append(f"devices {dup} send more than once")
+    if len(set(dsts)) != len(dsts):
+        dup = sorted({d for d in dsts if dsts.count(d) > 1})
+        problems.append(f"devices {dup} receive more than once")
+    missing_src = sorted(set(range(axis_size)) - set(srcs))
+    missing_dst = sorted(set(range(axis_size)) - set(dsts))
+    if missing_src:
+        problems.append(f"devices {missing_src} never send")
+    if missing_dst:
+        problems.append(f"devices {missing_dst} never receive "
+                        "(jax zero-fills them; a real interconnect "
+                        "deadlocks)")
+    return problems
+
+
+def check_comm_schedule(fn: Callable, *example_args,
+                        label: str = "fn") -> List[Finding]:
+    """JX-PPERMUTE-BIJECTION + JX-COLLECTIVE-IN-WHILE over a traced `fn`."""
+    closed = jax.make_jaxpr(fn)(*example_args)
+    findings: List[Finding] = []
+    for eqn, ctx in collect_eqns(closed, COLLECTIVE_PRIMITIVES):
+        name = eqn.primitive.name
+        if ctx.in_while:
+            findings.append(_finding(
+                "JX-COLLECTIVE-IN-WHILE", eqn, label,
+                f"`{name}` under a while_loop (path {'/'.join(ctx.path)}): "
+                "trip count is unknown at trace time, so the collective "
+                "schedule cannot be statically verified or counted"))
+        if name != "ppermute":
+            continue
+        perm = eqn.params.get("perm")
+        axis = eqn.params.get("axis_name")
+        size = ctx.axis_size(axis)
+        if perm is None or not size:
+            # unknown mesh axis (traced outside shard_map) — nothing to
+            # verify statically; the 1-shard guards make this legitimate
+            continue
+        problems = perm_problems(perm, size)
+        if problems:
+            findings.append(_finding(
+                "JX-PPERMUTE-BIJECTION", eqn, label,
+                f"ppermute perm={list(perm)} on axis {axis!r} (size {size}) "
+                f"is not a complete bijection: " + "; ".join(problems)))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Batch invariance (static collective schedule)
+# ---------------------------------------------------------------------------
+def collective_schedule(fn: Callable, *example_args) -> Tuple[Tuple, ...]:
+    """The ordered static collective schedule of a traced `fn`.
+
+    Each entry is (primitive, axis_name, perm, trip-multiplier) — the
+    structure of the communication, with payload shapes deliberately
+    excluded (they scale with batch size; the *schedule* must not).
+    """
+    closed = jax.make_jaxpr(fn)(*example_args)
+    sched: List[Tuple] = []
+    for eqn, ctx in collect_eqns(closed, COLLECTIVE_PRIMITIVES):
+        perm = eqn.params.get("perm")
+        sched.append((
+            eqn.primitive.name,
+            repr(eqn.params.get("axis_name")),
+            tuple((int(s), int(d)) for s, d in perm) if perm else None,
+            ctx.mult,
+        ))
+    return tuple(sched)
+
+
+def check_batch_schedule(fn_for_batch: Callable[[int], Tuple[Callable, tuple]],
+                         batches: Sequence[int] = (1, 64),
+                         label: str = "fn") -> List[Finding]:
+    """JX-BATCH-SCHEDULE: schedules at every batch size must be identical.
+
+    `fn_for_batch(B)` returns ``(fn, example_args)`` for batch size B.
+    """
+    ref_b = batches[0]
+    fn, args = fn_for_batch(ref_b)
+    ref = collective_schedule(fn, *args)
+    findings: List[Finding] = []
+    for b in batches[1:]:
+        fn, args = fn_for_batch(b)
+        sched = collective_schedule(fn, *args)
+        if sched != ref:
+            findings.append(Finding(
+                rule="JX-BATCH-SCHEDULE", path=label, symbol=label,
+                message=(
+                    f"collective schedule at B={b} differs from B={ref_b} "
+                    f"({len(sched)} vs {len(ref)} entries): the batched "
+                    "path re-runs or re-orders the exchange rounds instead "
+                    "of sharing them across the batch")))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# VMEM budget
+# ---------------------------------------------------------------------------
+def _block_bytes(block_shape, dtype) -> int:
+    n = 1
+    for d in block_shape:
+        if isinstance(d, (int, np.integer)):
+            n *= int(d)
+        # pallas Mapped/Squeezed dims contribute 1 element
+    return n * np.dtype(dtype).itemsize
+
+
+def pallas_footprint(eqn) -> Dict[str, int]:
+    """Recomputed VMEM footprint of one ``pallas_call`` equation.
+
+    Sums the per-grid-step block bytes of every operand/output BlockSpec
+    plus all scratch allocations — the resident VMEM one grid step needs,
+    the same model as `repro.kernels.ops.cheb_sweep_vmem_bytes` but
+    recovered from the *traced* GridMapping rather than the launch
+    parameters, so it audits what was actually staged.
+    """
+    gm = eqn.params["grid_mapping"]
+    block = 0
+    for bm in gm.block_mappings:
+        sds = bm.array_shape_dtype
+        block += _block_bytes(bm.block_shape, sds.dtype)
+    scratch = 0
+    kernel_jaxpr = eqn.params.get("jaxpr")
+    n_scratch = int(getattr(gm, "num_scratch_operands", 0) or 0)
+    if kernel_jaxpr is not None and n_scratch:
+        for var in kernel_jaxpr.invars[-n_scratch:]:
+            aval = var.aval
+            inner = getattr(aval, "inner_aval", aval)
+            shape = getattr(inner, "shape", None)
+            dtype = getattr(inner, "dtype", None)
+            if shape is not None and dtype is not None:
+                scratch += _block_bytes(shape, dtype)
+    return {"block_bytes": block, "scratch_bytes": scratch,
+            "total_bytes": block + scratch}
+
+
+def check_vmem_budget(fn: Callable, *example_args,
+                      budget: Optional[int] = None,
+                      label: str = "fn") -> List[Finding]:
+    """JX-VMEM-BUDGET: every traced pallas_call fits the sweep budget."""
+    if budget is None:
+        from ..kernels import ops as _ops
+        budget = _ops.DEFAULT_SWEEP_VMEM_BUDGET
+    closed = jax.make_jaxpr(fn)(*example_args)
+    findings: List[Finding] = []
+    for eqn, _ctx in collect_eqns(closed, {"pallas_call"}):
+        fp = pallas_footprint(eqn)
+        if fp["total_bytes"] > budget:
+            findings.append(_finding(
+                "JX-VMEM-BUDGET", eqn, label,
+                f"pallas_call footprint {fp['total_bytes']} B "
+                f"(blocks {fp['block_bytes']} + scratch "
+                f"{fp['scratch_bytes']}) exceeds the sweep VMEM budget "
+                f"{budget} B — the launch must shrink its tile or fall "
+                "back (see ops.fused_cheb_sweep's budget guard)"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Dtype discipline
+# ---------------------------------------------------------------------------
+def _float_dtypes(vars_) -> List[np.dtype]:
+    import jax.numpy as jnp
+
+    out = []
+    for v in vars_:
+        dt = getattr(getattr(v, "aval", None), "dtype", None)
+        if dt is None:
+            continue
+        dt = np.dtype(dt)
+        # jnp.issubdtype, not np.: the ml_dtypes floats (bfloat16, fp8)
+        # are exactly the ones implicit promotion bites
+        if jnp.issubdtype(dt, jnp.floating):
+            out.append(dt)
+    return out
+
+
+def check_dtype_discipline(fn: Callable, *example_args,
+                           label: str = "fn") -> List[Finding]:
+    """JX-DTYPE-F64 + JX-DTYPE-PROMOTION over a traced `fn` (see module
+    docstring for rule semantics; complex dtypes are exempt by design)."""
+    closed = jax.make_jaxpr(fn)(*example_args)
+    findings: List[Finding] = []
+
+    def visit(eqn, ctx: EqnContext):
+        in_f = _float_dtypes(eqn.invars)
+        out_f = _float_dtypes(eqn.outvars)
+        if any(d == np.float64 for d in out_f) \
+                and not all(d == np.float64 for d in in_f):
+            findings.append(_finding(
+                "JX-DTYPE-F64", eqn, label,
+                f"`{eqn.primitive.name}` upcasts to float64 on a hot path "
+                f"(inputs {[str(d) for d in in_f]}): doubles every halo "
+                "payload and leaves the f32 unit paths"))
+        if eqn.primitive.name != "convert_element_type" \
+                and len({d.itemsize for d in in_f}) > 1:
+            findings.append(_finding(
+                "JX-DTYPE-PROMOTION", eqn, label,
+                f"`{eqn.primitive.name}` mixes real floating widths "
+                f"{sorted({str(d) for d in in_f})}: implicit promotion — "
+                "cast explicitly so the recurrence dtype is intentional"))
+
+    walk_jaxpr(closed, visit)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Plan-level bundle
+# ---------------------------------------------------------------------------
+def check_plan(plan, n: Optional[int] = None,
+               batches: Sequence[int] = (1, 64),
+               budget: Optional[int] = None,
+               solve_methods: Sequence[str] = ()) -> List[Finding]:
+    """Run every jaxpr check over one `ExecutionPlan`.
+
+    Traces apply / apply_adjoint / apply_gram (unbatched (N,) signatures
+    for the safety/VMEM/dtype checks; (B, N) for each B in `batches` for
+    the schedule-equality check) and optionally ``plan.solve`` for each of
+    `solve_methods`.  Findings carry ``symbol = "<backend>.<method>"`` so
+    allowlist entries can pin to a traced target.
+    """
+    op = plan.op
+    if n is None:
+        if callable(op.P):
+            raise ValueError("check_plan needs n= for a closure P")
+        n = int(np.asarray(op.P).shape[0])
+    findings: List[Finding] = []
+
+    def spec(lead: tuple, *trailing) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(lead + trailing, np.float32)
+
+    targets: List[Tuple[str, Callable, Callable[[tuple], tuple]]] = [
+        ("apply", plan.apply, lambda lead: (spec(lead, n),)),
+        ("apply_adjoint", plan.apply_adjoint,
+         lambda lead: (spec(lead, op.eta, n),)),
+        ("apply_gram", plan.apply_gram, lambda lead: (spec(lead, n),)),
+    ]
+    for method in solve_methods:
+        def _solve(y, _m=method):
+            return plan.solve(y, _m, tau=0.5).x
+
+        targets.append((f"solve[{method}]", _solve,
+                        lambda lead: (spec(lead, n),)))
+
+    for name, fn, args_for in targets:
+        label = f"{plan.backend}.{name}"
+        args = args_for(())
+        findings += check_comm_schedule(fn, *args, label=label)
+        findings += check_vmem_budget(fn, *args, budget=budget, label=label)
+        findings += check_dtype_discipline(fn, *args, label=label)
+        findings += check_batch_schedule(
+            lambda b, _fn=fn, _af=args_for: (_fn, _af((b,))),
+            batches=batches, label=label)
+    return findings

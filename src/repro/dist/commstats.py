@@ -38,26 +38,31 @@ emit the communication-vs-network-size curve, and
 
 Caveats: counts are static (trace-time) quantities.  Backends that skip
 collectives on a 1-shard mesh (halo / pallas_halo guard ``size > 1``)
-measure zero there — measure on >= 2 shards.  `while` bodies (none in this
-repo's plans) would be counted once per trip of unknown count.
+measure zero there — measure on >= 2 shards.  A collective under a
+`while` body has *no* static count (the trip count is unknown at trace
+time), so :func:`measure` refuses to undercount it: it raises by default
+(``while_loops="error"``; pass ``"warn"`` to tally one trip loudly
+instead).  The jaxpr traversal itself lives in
+:mod:`repro.analysis.jaxpr_walk` (extracted from this module's original
+private walker), where `repro.analysis.checks` reuses it for the static
+invariant checks (`JX-COLLECTIVE-IN-WHILE` is this same rule, CI-gated).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Iterable, Tuple
+import logging
+import warnings
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import numpy as np
 
-#: Collective primitives tallied by :func:`measure`.
-COLLECTIVE_PRIMITIVES = frozenset({
-    "ppermute",
-    "pgather",
-    "all_gather",
-    "all_to_all",
-    "psum",
-    "reduce_scatter",
-})
+# The shared jaxpr visitor (Layer-1 substrate of `repro.analysis`); this
+# module re-exports COLLECTIVE_PRIMITIVES from it for compatibility.
+from ..analysis.jaxpr_walk import (COLLECTIVE_PRIMITIVES, eqn_payload,
+                                   walk_jaxpr)
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,55 +170,17 @@ class CommStats:
 
 
 # ---------------------------------------------------------------------------
-# Jaxpr walking
-# ---------------------------------------------------------------------------
-def _subjaxprs(value: Any) -> Iterable[Any]:
-    """Yield every Jaxpr reachable from one eqn param value."""
-    if isinstance(value, jax.core.Jaxpr):
-        yield value
-    elif isinstance(value, jax.core.ClosedJaxpr):
-        yield value.jaxpr
-    elif isinstance(value, (list, tuple)):
-        for v in value:
-            yield from _subjaxprs(v)
-
-
-def _payload(eqn) -> Tuple[int, int]:
-    """(elems, bytes) moved by one execution of a collective eqn."""
-    elems = 0
-    nbytes = 0
-    for var in eqn.invars:
-        aval = getattr(var, "aval", None)
-        shape = getattr(aval, "shape", None)
-        dtype = getattr(aval, "dtype", None)
-        if shape is None or dtype is None:
-            continue
-        n = int(np.prod(shape)) if len(shape) else 1
-        elems += n
-        nbytes += n * np.dtype(dtype).itemsize
-    return elems, nbytes
-
-
-def _walk(jaxpr, mult: int, tally: Dict[Tuple[str, int, int], int]) -> None:
-    for eqn in jaxpr.eqns:
-        name = eqn.primitive.name
-        if name in COLLECTIVE_PRIMITIVES:
-            elems, nbytes = _payload(eqn)
-            tally[(name, elems, nbytes)] = (
-                tally.get((name, elems, nbytes), 0) + mult)
-        sub_mult = mult
-        if name == "scan":
-            sub_mult = mult * int(eqn.params.get("length", 1))
-        for value in eqn.params.values():
-            for sub in _subjaxprs(value):
-                _walk(sub, sub_mult, tally)
-
-
-# ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
+class UncountableCollectiveError(RuntimeError):
+    """A collective sits under a `while_loop`: its execution count is not a
+    static (trace-time) quantity, so any tally would be wrong.  Restructure
+    the loop as a `scan` (fixed trip count) or measure the bounded inner
+    function directly."""
+
+
 def measure(fn: Callable, *example_args, n_shards: int = 1,
-            batch: int = 1) -> CommStats:
+            batch: int = 1, while_loops: str = "error") -> CommStats:
     """Trace `fn` on example arguments and tally its collectives.
 
     `example_args` may be concrete arrays or `jax.ShapeDtypeStruct`s —
@@ -221,10 +188,39 @@ def measure(fn: Callable, *example_args, n_shards: int = 1,
     the per-shard byte counts to mesh totals (pass the plan's shard count);
     `batch` records how many signals the traced call carries so the
     per-signal accessors can amortize.
+
+    A collective under a ``while_loop`` executes once per trip of a count
+    unknown at trace time — no static tally is correct.
+    ``while_loops="error"`` (default) raises
+    :class:`UncountableCollectiveError`; ``"warn"`` emits a `UserWarning`
+    (+ WARNING log) and counts the site once per enclosing-scan trip, so
+    the returned stats are an explicit *lower bound*.
     """
-    jaxpr = jax.make_jaxpr(fn)(*example_args)
+    if while_loops not in ("error", "warn"):
+        raise ValueError(
+            f"while_loops must be 'error' or 'warn', got {while_loops!r}")
+    closed = jax.make_jaxpr(fn)(*example_args)
     tally: Dict[Tuple[str, int, int], int] = {}
-    _walk(jaxpr.jaxpr, 1, tally)
+
+    def visit(eqn, ctx):
+        name = eqn.primitive.name
+        if name not in COLLECTIVE_PRIMITIVES:
+            return
+        if ctx.in_while:
+            msg = (
+                f"collective `{name}` under a while_loop (path "
+                f"{'/'.join(ctx.path) or '<top>'}): trip count is unknown "
+                "at trace time, so no static tally is correct")
+            if while_loops == "error":
+                raise UncountableCollectiveError(msg)
+            warnings.warn(msg + " — counting ONE trip; stats are a lower "
+                          "bound", stacklevel=3)
+            logger.warning("commstats.measure: %s (counting one trip)", msg)
+        elems, nbytes = eqn_payload(eqn)
+        tally[(name, elems, nbytes)] = (
+            tally.get((name, elems, nbytes), 0) + ctx.mult)
+
+    walk_jaxpr(closed, visit)
     calls = tuple(
         CollectiveCall(primitive=k[0], count=v, elems=k[1], nbytes=k[2])
         for k, v in sorted(tally.items()))

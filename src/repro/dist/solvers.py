@@ -204,6 +204,28 @@ def _fallback_runner(plan):
     return runner
 
 
+def _with_budget(mv, vmem_budget):
+    """Re-tag a runner matvec with a per-solve sweep VMEM budget.
+
+    The single-launch paths read the ``mv.block_ell`` / ``mv.vmem_budget``
+    tags (see `kernels.ops.fused_cheb_recurrence`); a per-call
+    ``vmem_budget=`` must reach them *without* mutating the backend's
+    shared matvec object — other plans and cached solves read the same
+    tags — so wrap the callable and stamp the override on the wrapper.
+    No-op for untagged matvecs: the budget only governs the Block-ELL
+    sweep launch.
+    """
+    if vmem_budget is None or getattr(mv, "block_ell", None) is None:
+        return mv
+
+    def wrapped(x):
+        return mv(x)
+
+    wrapped.block_ell = mv.block_ell
+    wrapped.vmem_budget = int(vmem_budget)
+    return wrapped
+
+
 def _op_solver_cache(op) -> Dict[Any, Any]:
     """Per-operator memo for the dense solve setup (diag(den(P)), rho).
 
@@ -250,11 +272,19 @@ def solve_plan(
     x0: Optional[Array] = None,
     history: bool = False,
     use_pallas: Optional[bool] = None,
+    vmem_budget: Optional[int] = None,
 ) -> SolveResult:
     """Apply x = g(P) y by the Section-V method of choice, distributed.
 
     See :meth:`repro.dist.operator.ExecutionPlan.solve` for the user-facing
-    reference; this is the implementation shared by every backend."""
+    reference; this is the implementation shared by every backend.
+
+    ``vmem_budget=`` overrides the single-launch sweep's VMEM guard for
+    this call only (bytes; default `kernels.ops.DEFAULT_SWEEP_VMEM_BUDGET`)
+    — tightening it forces the logged per-order fallback, the knob
+    `tools/lint_repro.py`'s JX-VMEM-BUDGET check and the budget-sweep
+    benchmarks share.  It changes the traced program, so it is part of the
+    `compiled_solve` cache key like every other solver kwarg."""
     if method not in METHODS:
         raise ValueError(
             f"unknown solve method {method!r}; available: {METHODS}")
@@ -278,7 +308,7 @@ def solve_plan(
 
     if method == "chebyshev":
         return _solve_chebyshev(plan, runner, y, num, den, K, history,
-                                use_pallas, info)
+                                use_pallas, vmem_budget, info)
     if den is None and not (method == "arma" and poles is not None):
         raise ValueError(
             f"method {method!r} needs the rational filter spec: pass "
@@ -289,7 +319,8 @@ def solve_plan(
                 if method == "arma" else ""))
     if method in ("jacobi", "cheb_jacobi"):
         return _solve_jacobi(plan, runner, y, num, den, K, method, rho,
-                             den_diag, x0, history, use_pallas, info)
+                             den_diag, x0, history, use_pallas, vmem_budget,
+                             info)
     return _solve_arma(plan, runner, y, num, den, K, poles, residues, const,
                        x0, history, info)
 
@@ -315,7 +346,8 @@ def _cheb_partial_sums(mv, x, c, alpha):
     return acc_f, hist
 
 
-def _solve_chebyshev(plan, runner, y, num, den, K, history, use_pallas, info):
+def _solve_chebyshev(plan, runner, y, num, den, K, history, use_pallas,
+                     vmem_budget, info):
     """Section-IV truncated Chebyshev approximation of g at order K."""
     from ..kernels import ops as kops
 
@@ -336,6 +368,7 @@ def _solve_chebyshev(plan, runner, y, num, den, K, history, use_pallas, info):
     alpha = lmax / 2.0
 
     def fn(mv, yl, c):
+        mv = _with_budget(mv, vmem_budget)
         if history:
             x, hist = _cheb_partial_sums(mv, yl, c, alpha)
             return x, hist
@@ -354,7 +387,7 @@ def _solve_chebyshev(plan, runner, y, num, den, K, history, use_pallas, info):
 
 
 def _solve_jacobi(plan, runner, y, num, den, K, method, rho, den_diag, x0,
-                  history, use_pallas, info):
+                  history, use_pallas, vmem_budget, info):
     """Jacobi (Eq. (24)) / Chebyshev-accelerated Jacobi (Eq. (25)) on
     den(P) x = num(P) y; deg(den) matvecs per round, deg(num) once for the
     right-hand side."""
@@ -392,6 +425,7 @@ def _solve_jacobi(plan, runner, y, num, den, K, method, rho, den_diag, x0,
     def fn(mv, yl, inv_dl, *rest):
         from ..kernels import ops as kops
 
+        mv = _with_budget(mv, vmem_budget)
         x0l = rest[0] if rest else None
         b = poly_matvec(mv, num, yl)
         # Single-launch upgrade: a matvec tagged with its local Block-ELL

@@ -1,6 +1,7 @@
-"""Docs stay consistent with the code (the CI `docs` job runs the same
-checker standalone; here it runs under pytest so local tier-1 catches
-drift too, plus a live cross-check of the registry scan)."""
+"""Docs stay consistent with the code (the CI `lint` job runs the same
+checker via `tools/lint_repro.py`; here it runs under pytest so local
+tier-1 catches drift too, plus a live cross-check of the registry
+scan)."""
 import os
 import sys
 

@@ -1,0 +1,86 @@
+"""ExecutionPlan.compiled()/compiled_solve() cache-key audit: every kwarg
+that changes the traced program must be part of the memo key, and repeat
+lookups with identical kwargs must return the SAME jitted callable."""
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph, wavelets
+from repro.dist import GraphOperator
+
+
+@pytest.fixture(scope="module")
+def op():
+    g, _ = graph.connected_sensor_graph(jax.random.PRNGKey(0), n=48,
+                                        theta=0.3, kappa=0.35)
+    lmax = g.lambda_max_bound()
+    return GraphOperator(P=g.laplacian(),
+                         multipliers=wavelets.sgwt_multipliers(lmax, J=2),
+                         lmax=lmax, K=6)
+
+
+@pytest.fixture(scope="module")
+def y(op):
+    n = np.asarray(op.P).shape[0]
+    return jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)
+
+
+def test_compiled_memo_identity(op):
+    plan = op.plan("dense")
+    assert plan.compiled("apply") is plan.compiled("apply")
+    assert plan.compiled("apply") is not plan.compiled("apply_gram")
+    with pytest.raises(KeyError):
+        plan.compiled("nope")
+
+
+def test_compiled_solve_memo_identity(op):
+    plan = op.plan("dense")
+    a = plan.compiled_solve("jacobi", tau=0.5)
+    assert plan.compiled_solve("jacobi", tau=0.5) is a
+
+
+def test_compiled_solve_distinct_kwargs_distinct_entries(op, y):
+    """The regression this file exists for: two calls differing ONLY in a
+    program-changing kwarg must not collide in the memo."""
+    plan = op.plan("dense")
+    base = plan.compiled_solve("jacobi", tau=0.5)
+    assert plan.compiled_solve("cheb_jacobi", tau=0.5, rho=0.5) is not base
+    assert plan.compiled_solve("jacobi", tau=0.25) is not base
+    assert plan.compiled_solve("jacobi", tau=0.5, n_iters=3) is not base
+    assert plan.compiled_solve("jacobi", tau=0.5, vmem_budget=4096) \
+        is not base
+    # and the distinct entries compute what their kwargs say: n_iters=3
+    # really runs 3 rounds, not the colliding default
+    x6 = np.asarray(base(y))
+    x3 = np.asarray(plan.compiled_solve("jacobi", tau=0.5, n_iters=3)(y))
+    assert not np.allclose(x6, x3)
+
+
+def test_compiled_solve_array_kwargs_key_by_value(op, y):
+    plan = op.plan("dense")
+    n = y.shape[0]
+    d1 = np.full((n,), 2.0, np.float32)
+    d2 = np.full((n,), 4.0, np.float32)
+    f1 = plan.compiled_solve("jacobi", tau=0.5, den_diag=d1)
+    f2 = plan.compiled_solve("jacobi", tau=0.5, den_diag=d2)
+    assert f1 is not f2
+    assert f1 is plan.compiled_solve("jacobi", tau=0.5,
+                                     den_diag=d1.copy())
+    assert not np.allclose(np.asarray(f1(y)), np.asarray(f2(y)))
+
+
+def test_solve_vmem_budget_forces_logged_fallback(op, y, caplog):
+    """vmem_budget= reaches the single-launch sweep guard: a starved
+    budget takes the logged per-order path and matches the default-budget
+    result (the knob changes the execution, never the math)."""
+    plan = op.plan("pallas")
+    ref = np.asarray(plan.solve(y, "jacobi", tau=0.5, use_pallas=True).x)
+    with caplog.at_level(logging.INFO, logger="repro.kernels.ops"):
+        out = np.asarray(plan.solve(y, "jacobi", tau=0.5, use_pallas=True,
+                                    vmem_budget=64).x)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+    assert any("exceeds budget" in r.getMessage()
+               for r in caplog.records), caplog.records

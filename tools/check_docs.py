@@ -1,5 +1,7 @@
 #!/usr/bin/env python3
-"""Docs consistency checker (stdlib-only; the CI `docs` job runs this).
+"""Docs consistency checker (stdlib-only; the CI `lint` job runs it via
+`tools/lint_repro.py`, which folds these checks in as DOC-* findings —
+this module stays runnable standalone).
 
 Two checks:
 
