@@ -1,0 +1,186 @@
+"""Continuous-batching serving under offered load: latency vs throughput.
+
+The production-trajectory metric for the serving engine: replay a seeded
+Poisson request stream (80% filter applies, 20% jacobi solves —
+`repro.serve.loadgen.DEFAULT_MIX`) against a wall-clock
+:class:`repro.serve.ServeEngine` at several offered loads and record what
+arriving users would see — p50/p99 latency, achieved signals/sec, mean
+batch occupancy and padding waste per (backend, rate).  Writes repo-root
+``BENCH_serving.json``.
+
+The arrival stream is deterministic per seed (the same events the
+virtual-clock tests replay); only the measured durations are wall-clock.
+Buckets/max-wait mirror the engine defaults: at low offered load the
+occupancy is set by ``rate x max_wait`` (deadline flushing), at high load
+by the bucket ceiling (batch-full flushing) — the crossover is the
+continuous-batching win this file tracks.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving \
+        [--backends dense,pallas] [--rates 200,1000,4000] [--requests 300]
+        [--n 500] [--k 20] [--buckets 1,8,64] [--max-wait-ms 5] [--check]
+
+``--check`` (CI smoke): every request answered exactly once, finite p99,
+and mean batch occupancy >= --check-occupancy at the HIGHEST offered rate
+(the engine must actually be coalescing, not trickling B=1 launches).
+"""
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_JSON = os.path.join(REPO_ROOT, "BENCH_serving.json")
+DEFAULT_BACKENDS = ("dense", "pallas")
+DEFAULT_RATES = (200.0, 1000.0, 4000.0)
+DEFAULT_BUCKETS = (1, 8, 64)
+
+
+def serve_stream(plan, events, n, buckets, max_wait):
+    """Replay `events` against a wall-clock engine; returns the metrics
+    summary.  The submit loop polls continuously between arrivals (the
+    serving thread's job), so deadline flushes happen on time."""
+    from repro.serve import ServeEngine, WallClock, signal_for
+
+    eng = ServeEngine(plan, buckets=buckets, max_wait=max_wait,
+                      clock=WallClock(), sync_results=True)
+    eng.warm()
+    # warm() covers the apply kinds; pre-compile the stream's solve
+    # signatures too so measured latency is steady-state, not first-batch
+    # trace time
+    solve_specs = {(ev.method, ev.solve_kwargs) for ev in events
+                   if ev.kind == "solve"}
+    for method, kw in sorted(solve_specs):
+        plan.bucketed_callables(buckets, kinds=(),
+                                solve_specs=[(method, dict(kw))],
+                                warm=True)
+    signals = [signal_for(ev, n) for ev in events]
+    start = eng.clock.now()
+    for ev, sig in zip(events, signals):
+        target = start + ev.t
+        while eng.clock.now() < target:
+            if not eng.poll():
+                # nothing due: yield the tiniest OS slice rather than
+                # hard-spinning the submit loop
+                time.sleep(1e-5)
+        eng.submit(sig, op=ev.op, kind=ev.kind, method=ev.method,
+                   **ev.kwargs())
+    while eng.pending_count:
+        eng.poll()
+        time.sleep(1e-5)
+    summary = eng.metrics.summary()
+    summary["per_key"] = eng.metrics.per_key_counts()
+    return summary
+
+
+def run(backends=DEFAULT_BACKENDS, rates=DEFAULT_RATES, n=500, K=20, J=2,
+        n_requests=300, buckets=DEFAULT_BUCKETS, max_wait=0.005, seed=0,
+        json_path=DEFAULT_JSON):
+    from repro.core import wavelets
+    from repro.dist import GraphOperator
+    from repro.serve import poisson_arrivals
+
+    from .common import row, seeded_sensor_graph
+
+    gs, _ = seeded_sensor_graph(n, sort=True)  # banded: halo-safe too
+    lmax = gs.lambda_max_bound()
+    op = GraphOperator(P=gs.laplacian(),
+                       multipliers=wavelets.sgwt_multipliers(lmax, J=J),
+                       lmax=lmax, K=K)
+    results = {}
+    for backend in backends:
+        plan = op.plan(backend)
+        per_rate = {}
+        for rate in rates:
+            events = poisson_arrivals(rate=rate, n_requests=n_requests,
+                                      seed=seed)
+            s = serve_stream(plan, events, gs.n_vertices, buckets,
+                             max_wait)
+            per_rate[str(int(rate))] = s
+            row(f"serving_{backend}_rate{int(rate)}",
+                s["latency_ms"]["p99"] * 1e3 if s["latency_ms"]["p99"]
+                else 0.0,
+                f"p50={s['latency_ms']['p50']:.2f}ms "
+                f"p99={s['latency_ms']['p99']:.2f}ms "
+                f"sps={s['signals_per_sec']:.0f} "
+                f"occ={s['mean_batch_occupancy']:.1f}")
+        results[backend] = per_rate
+    payload = {
+        "bench": "serving",
+        "n": int(gs.n_vertices),
+        "K": int(op.K),
+        "eta": int(op.eta),
+        "n_requests": int(n_requests),
+        "buckets": [int(b) for b in buckets],
+        "max_wait_ms": max_wait * 1e3,
+        "offered_rates": [float(r) for r in rates],
+        "seed": int(seed),
+        "device_count": len(jax.devices()),
+        "backend_default": jax.default_backend(),
+        "results": results,
+    }
+    if json_path:
+        parent = os.path.dirname(os.path.abspath(json_path))
+        os.makedirs(parent, exist_ok=True)
+        with open(json_path, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}", flush=True)
+    return payload
+
+
+def check(payload, min_occupancy: float) -> None:
+    """CI gates: exactly-once service, finite tail latency, and real
+    coalescing at the highest offered rate."""
+    gate = []
+    for backend, per_rate in payload["results"].items():
+        for rate, s in per_rate.items():
+            assert s["served_exactly_once"], (
+                f"{backend}@{rate}: {s['n_served']}/{s['n_submitted']} "
+                "served — requests lost or duplicated")
+            p99 = s["latency_ms"]["p99"]
+            assert p99 is not None and np.isfinite(p99), (
+                f"{backend}@{rate}: p99 latency is not finite: {p99}")
+        top = str(int(max(float(r) for r in per_rate)))
+        occ = per_rate[top]["mean_batch_occupancy"]
+        assert occ >= min_occupancy, (
+            f"{backend}@{top}: mean batch occupancy {occ:.2f} < "
+            f"{min_occupancy} — the engine is not coalescing under load")
+        gate.append(f"{backend} occ={occ:.1f}")
+    print("# serving gate OK: " + ", ".join(gate), flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backends", default=",".join(DEFAULT_BACKENDS))
+    ap.add_argument("--rates", default=",".join(
+        str(int(r)) for r in DEFAULT_RATES),
+        help="offered loads in requests/sec")
+    ap.add_argument("--requests", type=int, default=300,
+                    help="requests per (backend, rate) leg")
+    ap.add_argument("--n", type=int, default=500)
+    ap.add_argument("--k", type=int, default=20)
+    ap.add_argument("--buckets", default="1,8,64")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-path", default=DEFAULT_JSON,
+                    help="output JSON; '' disables writing")
+    ap.add_argument("--check", action="store_true",
+                    help="gate: exactly-once, finite p99, coalescing")
+    ap.add_argument("--check-occupancy", type=float, default=2.0,
+                    help="min mean batch occupancy at the highest rate")
+    args = ap.parse_args()
+    payload = run(
+        backends=args.backends.split(","),
+        rates=tuple(float(r) for r in args.rates.split(",")),
+        n=args.n, K=args.k, n_requests=args.requests,
+        buckets=tuple(int(b) for b in args.buckets.split(",")),
+        max_wait=args.max_wait_ms * 1e-3, seed=args.seed,
+        json_path=args.json_path)
+    if args.check:
+        check(payload, args.check_occupancy)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,10 @@ B in {1, 8, 64} through every backend's batched apply and writes the
 repo-root BENCH_throughput.json signals/sec trajectory.  The `fig2`
 benchmark drives the Section-V solvers (chebyshev/jacobi/cheb_jacobi/arma)
 through the sharded `plan.solve` path and writes the repo-root
-BENCH_fig2.json error-vs-measured-communication table.
+BENCH_fig2.json error-vs-measured-communication table.  The `serving`
+benchmark (bench_serving) replays seeded Poisson request streams through
+the repro.serve continuous-batching engine at several offered loads and
+writes the repo-root BENCH_serving.json latency/throughput table.
 """
 import argparse
 import sys
@@ -31,7 +34,7 @@ def main() -> None:
                     help="paper-scale trial counts")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
-                    "fig1,fig2,lasso,comm,kernels,scaling,throughput")
+                    "fig1,fig2,lasso,comm,kernels,scaling,throughput,serving")
     ap.add_argument("--backend", default=None,
                     help="comma-separated execution backends to sweep "
                     "(dense,pallas,halo,pallas_halo,allgather) through the "
@@ -42,11 +45,12 @@ def main() -> None:
 
     from . import (bench_comm, bench_fig1_denoising, bench_fig2_methods,
                    bench_kernels, bench_lasso, bench_scaling,
-                   bench_throughput)
+                   bench_serving, bench_throughput)
 
     backends = args.backend.split(",") if args.backend else None
     wanted = set((args.only or
-                  "fig1,fig2,lasso,comm,kernels,throughput").split(","))
+                  "fig1,fig2,lasso,comm,kernels,throughput,serving")
+                 .split(","))
     print("name,us_per_call,derived")
     if "fig1" in wanted:
         bench_fig1_denoising.run(n_trials=1000 if args.full else 20)
@@ -94,6 +98,21 @@ def main() -> None:
             json_path = os.path.join(args.json_dir, "BENCH_throughput.json")
         bench_throughput.run(backends=backends, json_path=json_path,
                              iters=20 if args.full else 5)
+    if "serving" in wanted:
+        # Offered-load replay through the continuous-batching engine.
+        # The tracked repo-root BENCH_serving.json is only rewritten by a
+        # default run (same gating as the other tracked bench JSONs).
+        import os
+
+        if backends is None and args.json_dir == ".":
+            serving_json = bench_serving.DEFAULT_JSON
+        else:
+            serving_json = os.path.join(args.json_dir, "BENCH_serving.json")
+        bench_serving.run(
+            backends=(tuple(backends) if backends
+                      else bench_serving.DEFAULT_BACKENDS),
+            n_requests=300 if args.full else 150,
+            json_path=serving_json)
     if "scaling" in wanted:
         if backends is None:
             bench_scaling.run(backends=None, json_dir=args.json_dir)

@@ -64,6 +64,16 @@ def lists(elements: SearchStrategy, min_size: int = 0, max_size: int = 10):
         draw, [[elements.sample(rng0) for _ in range(max(min_size, 1))]])
 
 
+def permutations(values: Sequence):
+    """Random permutation of `values` (mirrors hypothesis'
+    st.permutations).  Boundary draws: the identity ordering and the full
+    reversal — the two extremes of arrival-order shuffling the serving
+    coalescing tests exercise."""
+    values = list(values)
+    return SearchStrategy(lambda rng: rng.sample(values, len(values)),
+                          [list(values), list(reversed(values))])
+
+
 def just(value):
     return SearchStrategy(lambda rng: value, [value])
 

@@ -36,6 +36,41 @@ Array = jax.Array
 logger = logging.getLogger(__name__)
 
 
+def canonical_kwarg(v) -> Any:
+    """Hashable, collision-free canonical form of one solver kwarg value.
+
+    The memo keys of :meth:`ExecutionPlan.compiled_solve` — and the
+    serving engine's compatibility keys, which must agree with them —
+    key array-valued kwargs by (shape, dtype, bytes) so two solves of
+    different systems never share a compiled entry.  ``bool`` is tagged
+    before the numeric paths because ``True == 1`` (and hashes equal):
+    without the tag, ``use_pallas=True`` and ``use_pallas=1`` would
+    collide into one entry keyed by whichever was compiled first.
+    """
+    if isinstance(v, bool):
+        return ("bool", v)
+    if isinstance(v, (list, tuple)):
+        return tuple(canonical_kwarg(x) for x in v)
+    if hasattr(v, "shape") or type(v).__module__ == "numpy":
+        import numpy as np
+
+        a = np.asarray(v)
+        return (a.shape, str(a.dtype), a.tobytes())
+    return v
+
+
+def canonical_solve_items(solve_kwargs: Dict[str, Any]):
+    """Sorted ``(name, canonical_kwarg(value))`` tuple for a kwargs dict.
+
+    This IS the kwargs part of the `compiled_solve` memo key;
+    `repro.serve` builds its request-compatibility keys from the same
+    function so "same compat key" and "same compiled entry" can never
+    drift apart.
+    """
+    return tuple((k, canonical_kwarg(v))
+                 for k, v in sorted(solve_kwargs.items()))
+
+
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
     """A compiled-strategy view of one GraphOperator.
@@ -107,18 +142,7 @@ class ExecutionPlan:
         hold the returned callable in the request loop rather than calling
         ``compiled_solve(...)`` per request when passing large arrays.
         """
-        import numpy as np
-
-        def _key(v):
-            if isinstance(v, (list, tuple)):
-                return tuple(_key(x) for x in v)
-            if hasattr(v, "shape") or isinstance(v, np.ndarray):
-                a = np.asarray(v)
-                return (a.shape, str(a.dtype), a.tobytes())
-            return v
-
-        key = ("solve", method) + tuple(
-            (k, _key(v)) for k, v in sorted(solve_kwargs.items()))
+        key = ("solve", method) + canonical_solve_items(solve_kwargs)
         cache = self._jit_cache()
         if key not in cache:
             history = bool(solve_kwargs.get("history", False))
@@ -129,6 +153,67 @@ class ExecutionPlan:
 
             cache[key] = jax.jit(run)
         return cache[key]
+
+    def bucketed_callables(self, buckets, kinds=("apply",),
+                           solve_specs=(), n: Optional[int] = None,
+                           dtype=None, warm: bool = False):
+        """Enumerate the compiled entries a serving loop dispatches onto.
+
+        Continuous-batching serving (``repro.serve``) pads every dynamic
+        batch to a fixed set of bucket sizes so the engine only ever
+        presents ``len(buckets)`` signatures per callable — this method
+        is the inventory of that contract.  Returns an ordered dict
+
+            {(label, B): callable}
+
+        where `label` is a plan kind (``"apply"`` | ``"apply_adjoint"``
+        | ``"apply_gram"``) or ``("solve", method, canonical-kwargs)``
+        for each ``(method, kwargs)`` pair in `solve_specs`, and the
+        callable takes one ``(B, N)`` stack (``(B, eta, N)`` for the
+        adjoint).  Entries for the same label share ONE memoized jit
+        wrapper (:meth:`compiled` / :meth:`compiled_solve`): bucket
+        specialization lives in jax's per-shape trace cache under it, so
+        distinct buckets get distinct compiled executables while repeat
+        calls at any enumerated bucket never retrace.
+
+        ``warm=True`` runs each entry once on zeros of its bucket shape,
+        paying every trace + compile up front so the first real request
+        of each bucket is served at steady-state latency.  `n` defaults
+        to the operator's dense-P dimension (pass it for closure-P
+        operators).
+        """
+        import collections
+
+        import jax.numpy as jnp
+        import numpy as np
+
+        if n is None:
+            if callable(self.op.P):
+                raise ValueError(
+                    "bucketed_callables needs n= for a closure P")
+            n = int(np.asarray(self.op.P).shape[0])
+        dtype = dtype or jnp.float32
+        buckets = tuple(sorted({int(b) for b in buckets}))
+        if not buckets or buckets[0] < 1:
+            raise ValueError(f"buckets must be positive ints, got {buckets}")
+        entries = collections.OrderedDict()
+        for kind in kinds:
+            fn = self.compiled(kind)
+            lead = (self.op.eta,) if kind == "apply_adjoint" else ()
+            for B in buckets:
+                entries[(kind, B)] = (fn, (B,) + lead + (int(n),))
+        for method, kw in solve_specs:
+            kw = dict(kw or {})
+            label = ("solve", method) + canonical_solve_items(kw)
+            fn = self.compiled_solve(method, **kw)
+            for B in buckets:
+                entries[(label, B)] = (fn, (B, int(n)))
+        out = collections.OrderedDict()
+        for (label, B), (fn, shape) in entries.items():
+            if warm:
+                fn(jnp.zeros(shape, dtype))
+            out[(label, B)] = fn
+        return out
 
     # mirrored operator metadata -------------------------------------------
     @property

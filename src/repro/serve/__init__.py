@@ -1,0 +1,54 @@
+"""repro.serve — continuous-batching serving over ExecutionPlan callables.
+
+The production face of the paper's batch-amortization result: B requests
+that share a compatibility key ride ONE padded (B, N) launch and hence
+one set of 2K|E| Chebyshev exchange rounds, instead of B sets.
+
+* :mod:`repro.serve.engine`   — :class:`ServeEngine`: per-key FIFO
+  admission, batch-full/deadline flushing, bucket padding, dispatch onto
+  the plan's memoized compiled callables, per-request futures.
+* :mod:`repro.serve.request`  — :class:`CompatKey` /
+  :func:`compat_key` (grouping = the `compiled_solve` memo key),
+  :class:`Response`, :class:`ServeFuture`.
+* :mod:`repro.serve.batching` — pad-to-bucket packing and its lossless
+  inverse (:func:`pack_batch` / :func:`unpack_batch`,
+  :func:`bucket_for`).
+* :mod:`repro.serve.clock`    — injectable time (:class:`VirtualClock`
+  for deterministic tests, :class:`WallClock` for production).
+* :mod:`repro.serve.metrics`  — :class:`LatencyAccounter` (p50/p99,
+  signals/sec, batch occupancy, padding waste).
+* :mod:`repro.serve.loadgen`  — seeded Poisson/burst arrival streams +
+  :func:`replay_virtual`.
+
+Usage: API.md ("Serving"); request walk-through: docs/ARCHITECTURE.md.
+"""
+from .batching import bucket_for, pack_batch, unpack_batch
+from .clock import VirtualClock, WallClock
+from .engine import DEFAULT_BUCKETS, ServeEngine
+from .loadgen import (ArrivalEvent, burst_arrivals, poisson_arrivals,
+                      replay_virtual, signal_for)
+from .metrics import BatchRecord, LatencyAccounter
+from .request import (CompatKey, PendingError, Response, ServeFuture,
+                      compat_key)
+
+__all__ = [
+    "ArrivalEvent",
+    "BatchRecord",
+    "CompatKey",
+    "DEFAULT_BUCKETS",
+    "LatencyAccounter",
+    "PendingError",
+    "Response",
+    "ServeEngine",
+    "ServeFuture",
+    "VirtualClock",
+    "WallClock",
+    "bucket_for",
+    "burst_arrivals",
+    "compat_key",
+    "pack_batch",
+    "poisson_arrivals",
+    "replay_virtual",
+    "signal_for",
+    "unpack_batch",
+]

@@ -1,0 +1,267 @@
+"""Continuous-batching serving engine over memoized ExecutionPlan callables.
+
+Arriving filter/solve requests are admitted into per-:class:`CompatKey`
+FIFO queues, coalesced into dynamic batches, padded to a fixed set of
+compiled bucket sizes, dispatched onto the plan's memoized
+``compiled()/compiled_solve()`` callables (one (B, N) launch — B signals
+share one set of the paper's 2K|E| exchange rounds), and unpacked back to
+per-request futures.  In the spirit of JetStream's slot-based engine API:
+the accelerator only ever sees the fixed bucket signatures, the dynamic
+part (who rides which batch) lives entirely on the host side of the
+queue.
+
+Scheduling policy (deterministic, single-threaded, clock-injected):
+
+* **batch-full flush** — a key whose queue reaches the largest bucket
+  dispatches immediately at :meth:`submit` time.
+* **deadline flush** — :meth:`poll` dispatches every key whose OLDEST
+  request has waited ``max_wait`` seconds; due keys go in
+  oldest-request-first order and a flushed key drains completely (in
+  largest-bucket chunks), so no admitted request ever waits more than
+  ``max_wait`` past its arrival before dispatch — the starvation bound
+  `tests/test_serving.py` asserts.
+* **bucket choice** — smallest bucket >= group size; zero-padded slots
+  are counted as ``padding_waste`` by the accounter.
+
+Time comes exclusively from the injected :mod:`~repro.serve.clock`:
+virtual in tests (every decision reproducible without sleeping), wall in
+``benchmarks/bench_serving.py``.
+"""
+from __future__ import annotations
+
+import itertools
+import logging
+from collections import OrderedDict, deque
+from typing import Any, Deque, Dict, List, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .batching import bucket_for, pack_batch, unpack_batch
+from .clock import WallClock
+from .metrics import BatchRecord, LatencyAccounter
+from .request import (CompatKey, Request, Response, ServeFuture, compat_key)
+
+logger = logging.getLogger(__name__)
+
+DEFAULT_BUCKETS = (1, 8, 64)
+
+
+class _Group:
+    """Per-CompatKey admission queue + the kwargs to rebuild its callable."""
+
+    __slots__ = ("queue", "method", "solve_kwargs")
+
+    def __init__(self, method: Optional[str],
+                 solve_kwargs: Optional[Dict[str, Any]]):
+        self.queue: Deque[Request] = deque()
+        self.method = method
+        self.solve_kwargs = dict(solve_kwargs or {})
+
+
+class ServeEngine:
+    """Coalesces compatible requests onto shared bucketed launches.
+
+    plans: one :class:`~repro.dist.operator.ExecutionPlan` or a mapping
+    ``{name: plan}`` (requests address operators by name; the default
+    single-plan form registers under ``"default"``).  buckets: the
+    compiled batch sizes (sorted, deduped).  max_wait: seconds a request
+    may queue before a deadline flush.  clock: any ``now()`` provider
+    (default :class:`WallClock`).  sync_results=True blocks on each
+    dispatched batch so ``t_complete`` is an honest latency sample (the
+    one deliberate host sync, at the queue boundary — allowlisted for
+    RP-HOST-SYNC); False leaves results as in-flight jax arrays, which
+    is the right mode under a virtual clock where execution time is
+    modelled as zero anyway.
+    """
+
+    def __init__(self, plans, *, buckets=DEFAULT_BUCKETS,
+                 max_wait: float = 0.005, clock=None,
+                 sync_results: bool = True,
+                 accounter: Optional[LatencyAccounter] = None):
+        if not isinstance(plans, Mapping):
+            plans = {"default": plans}
+        if not plans:
+            raise ValueError("ServeEngine needs at least one plan")
+        self.plans = dict(plans)
+        self.buckets = tuple(sorted({int(b) for b in buckets}))
+        if not self.buckets or self.buckets[0] < 1:
+            raise ValueError(
+                f"buckets must be positive ints, got {buckets!r}")
+        if max_wait < 0:
+            raise ValueError(f"max_wait must be >= 0, got {max_wait}")
+        self.max_wait = float(max_wait)
+        self.clock = clock if clock is not None else WallClock()
+        self.sync_results = bool(sync_results)
+        self.metrics = accounter if accounter is not None \
+            else LatencyAccounter()
+        self._groups: "OrderedDict[CompatKey, _Group]" = OrderedDict()
+        self._ids = itertools.count()
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, signal, *, op: str = "default", kind: str = "apply",
+               method: Optional[str] = None,
+               **solve_kwargs) -> ServeFuture:
+        """Admit one request; returns its (cooperative) future.
+
+        `signal` is ONE unbatched request — ``(N,)`` for
+        apply/apply_gram/solve, ``(eta, N)`` for apply_adjoint; the batch
+        axis belongs to the engine.  Compatible requests (same
+        :func:`compat_key`) coalesce; a full largest bucket dispatches
+        inline before returning.
+        """
+        if op not in self.plans:
+            raise KeyError(
+                f"unknown operator {op!r}; registered: "
+                f"{sorted(self.plans)}")
+        plan = self.plans[op]
+        key = compat_key(op, plan, kind, method, solve_kwargs)
+        signal = jnp.asarray(signal)
+        self._validate_shape(plan, kind, signal)
+        group = self._groups.get(key)
+        if group is None:
+            group = self._groups.setdefault(
+                key, _Group(method, solve_kwargs))
+        now = self.clock.now()
+        req = Request(id=next(self._ids), key=key, signal=signal,
+                      t_arrival=now, future=None)
+        req.future = ServeFuture(req.id)
+        self.metrics.record_arrival(req.id, now)
+        group.queue.append(req)
+        while len(group.queue) >= self.buckets[-1]:
+            self._dispatch_chunk(key, group)
+        return req.future
+
+    def _validate_shape(self, plan, kind: str, signal) -> None:
+        n = self._plan_n(plan)
+        want_ndim = 2 if kind == "apply_adjoint" else 1
+        if signal.ndim != want_ndim:
+            raise ValueError(
+                f"kind {kind!r} serves ONE unbatched request of rank "
+                f"{want_ndim} (the engine owns the batch axis); got "
+                f"shape {tuple(signal.shape)}")
+        if n is not None and signal.shape[-1] != n:
+            raise ValueError(
+                f"signal has N={signal.shape[-1]}, plan expects N={n}")
+        if kind == "apply_adjoint" and signal.shape[0] != plan.eta:
+            raise ValueError(
+                f"adjoint request must be (eta, N) = ({plan.eta}, {n}); "
+                f"got {tuple(signal.shape)}")
+
+    @staticmethod
+    def _plan_n(plan) -> Optional[int]:
+        if callable(plan.op.P):
+            return None
+        return int(np.asarray(plan.op.P).shape[0])
+
+    # -- scheduling ----------------------------------------------------------
+    @property
+    def pending_count(self) -> int:
+        return sum(len(g.queue) for g in self._groups.values())
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest instant any queued group becomes due (None if idle)."""
+        heads = [g.queue[0].t_arrival for g in self._groups.values()
+                 if g.queue]
+        return min(heads) + self.max_wait if heads else None
+
+    def poll(self) -> int:
+        """Deadline flush: dispatch every due group; returns #requests
+        served.  Due groups drain oldest-request-first (FIFO fairness
+        across keys), each in largest-bucket chunks."""
+        now = self.clock.now()
+        # dueness is `now >= arrival + max_wait` — the SAME float
+        # expression next_deadline() returns, so advancing a virtual
+        # clock exactly to a reported deadline always flushes it
+        # ((now - arrival) >= max_wait can round the other way and
+        # livelock the deadline-hopping drivers)
+        due = [(g.queue[0].t_arrival, key) for key, g in
+               self._groups.items()
+               if g.queue and now >= g.queue[0].t_arrival + self.max_wait]
+        served = 0
+        for _, key in sorted(due, key=lambda p: p[0]):
+            group = self._groups[key]
+            while group.queue:
+                served += self._dispatch_chunk(key, group)
+        return served
+
+    def flush(self) -> int:
+        """Dispatch everything pending regardless of deadlines."""
+        served = 0
+        for key in list(self._groups):
+            group = self._groups[key]
+            while group.queue:
+                served += self._dispatch_chunk(key, group)
+        return served
+
+    def run_until_idle(self, max_steps: int = 100_000) -> int:
+        """Virtual-clock driver: hop the clock deadline-to-deadline until
+        every admitted request is answered.  Requires a clock with
+        ``advance_to`` (the virtual one); wall-clock loops call
+        :meth:`poll` on their own cadence instead."""
+        advance_to = getattr(self.clock, "advance_to", None)
+        if advance_to is None:
+            raise TypeError(
+                "run_until_idle needs a clock with advance_to() (e.g. "
+                "VirtualClock); wall-clock serving loops drive poll()")
+        served = 0
+        for _ in range(max_steps):
+            deadline = self.next_deadline()
+            if deadline is None:
+                return served
+            advance_to(deadline)
+            served += self.poll()
+        raise RuntimeError(
+            f"run_until_idle did not drain in {max_steps} steps")
+
+    # -- dispatch ------------------------------------------------------------
+    def _callable(self, key: CompatKey, group: _Group):
+        plan = self.plans[key.op]
+        if key.kind == "solve":
+            return plan.compiled_solve(group.method, **group.solve_kwargs)
+        return plan.compiled(key.kind)
+
+    def _dispatch_chunk(self, key: CompatKey, group: _Group) -> int:
+        """Pack, launch and unpack the oldest largest-bucket-or-fewer
+        requests of one group; resolves their futures."""
+        take = min(len(group.queue), self.buckets[-1])
+        reqs = [group.queue.popleft() for _ in range(take)]
+        bucket = bucket_for(take, self.buckets)
+        batch, n_valid = pack_batch([r.signal for r in reqs], bucket)
+        fn = self._callable(key, group)
+        t_dispatch = self.clock.now()
+        out = fn(batch)
+        if self.sync_results:
+            # The one deliberate host sync, at the queue boundary: a
+            # batch's completion instant IS the latency sample every
+            # response in it reports (allowlisted RP-HOST-SYNC).
+            out = jax.block_until_ready(out)
+        t_complete = self.clock.now()
+        rows = unpack_batch(out, n_valid)
+        for req, row in zip(reqs, rows):
+            resp = Response(id=req.id, key=key, value=row,
+                            t_arrival=req.t_arrival,
+                            t_dispatch=t_dispatch,
+                            t_complete=t_complete, bucket=bucket,
+                            occupancy=n_valid)
+            req.future._resolve(resp)
+            self.metrics.record_served(req.id, t_dispatch, t_complete)
+        self.metrics.record_batch(BatchRecord(
+            key=key, bucket=bucket, occupancy=n_valid,
+            t_dispatch=t_dispatch, t_complete=t_complete))
+        logger.debug("serve dispatch %s: bucket=%d occupancy=%d",
+                     key.label(), bucket, n_valid)
+        return n_valid
+
+    # -- warmup --------------------------------------------------------------
+    def warm(self) -> int:
+        """Pre-trace/compile every (registered kind, bucket) signature of
+        every plan so first requests are served at steady-state latency.
+        Apply kinds only (solve signatures appear with their kwargs at
+        first dispatch); returns the number of warmed entries."""
+        n = 0
+        for plan in self.plans.values():
+            n += len(plan.bucketed_callables(self.buckets,
+                                             kinds=("apply",), warm=True))
+        return n

@@ -1,0 +1,138 @@
+"""Latency and batch-efficiency accounting for the serving engine.
+
+Every timestamp the accounter sees comes from the engine's injected
+clock, so under a :class:`repro.serve.clock.VirtualClock` the whole
+summary — p50/p99 latency, signals/sec, batch occupancy, padding waste —
+is a deterministic function of the arrival schedule.  The same schema is
+what ``benchmarks/bench_serving.py`` writes into ``BENCH_serving.json``
+(documented in API.md, "Serving").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from .request import CompatKey
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchRecord:
+    """One dispatched batch: which key, how full, how long."""
+
+    key: CompatKey
+    bucket: int
+    occupancy: int          # real requests (the rest is zero padding)
+    t_dispatch: float
+    t_complete: float
+
+    @property
+    def padding(self) -> int:
+        return self.bucket - self.occupancy
+
+
+class LatencyAccounter:
+    """Collects per-request and per-batch records; summarizes on demand.
+
+    `record_served` enforces the exactly-once contract: a request id
+    served twice raises immediately (the bench's ``--check`` gate also
+    re-asserts it from the counts).
+    """
+
+    def __init__(self):
+        self._arrivals: Dict[int, float] = {}
+        self._served: Dict[int, float] = {}
+        self._latencies: List[float] = []
+        self._queue_delays: List[float] = []
+        self.batches: List[BatchRecord] = []
+
+    # -- recording (called by the engine) ----------------------------------
+    def record_arrival(self, request_id: int, t: float) -> None:
+        if request_id in self._arrivals:
+            raise RuntimeError(f"request {request_id} submitted twice")
+        self._arrivals[request_id] = t
+
+    def record_served(self, request_id: int, t_dispatch: float,
+                      t_complete: float) -> None:
+        if request_id in self._served:
+            raise RuntimeError(
+                f"request {request_id} served twice — exactly-once "
+                "violated")
+        t_arr = self._arrivals[request_id]
+        self._served[request_id] = t_complete
+        self._latencies.append(t_complete - t_arr)
+        self._queue_delays.append(t_dispatch - t_arr)
+
+    def record_batch(self, record: BatchRecord) -> None:
+        self.batches.append(record)
+
+    # -- views --------------------------------------------------------------
+    @property
+    def n_submitted(self) -> int:
+        return len(self._arrivals)
+
+    @property
+    def n_served(self) -> int:
+        return len(self._served)
+
+    @property
+    def n_pending(self) -> int:
+        return self.n_submitted - self.n_served
+
+    def summary(self) -> Dict[str, Any]:
+        """The serving metrics schema (all times from the engine clock).
+
+        latency_ms/queue_delay_ms: p50/p99/mean/max over served requests;
+        signals_per_sec: served / (last completion - first arrival);
+        mean_batch_occupancy: mean real-requests-per-dispatch;
+        padding_waste: padded rows / dispatched rows (0 = every slot did
+        real work); served_exactly_once: every submitted id served once.
+        """
+        lat = np.asarray(self._latencies, dtype=np.float64)
+        qd = np.asarray(self._queue_delays, dtype=np.float64)
+        occ = np.asarray([b.occupancy for b in self.batches], np.float64)
+        buckets = np.asarray([b.bucket for b in self.batches], np.float64)
+        span = 0.0
+        if self._served:
+            span = max(self._served.values()) - min(self._arrivals.values())
+        total_rows = float(buckets.sum()) if len(buckets) else 0.0
+        return {
+            "n_submitted": self.n_submitted,
+            "n_served": self.n_served,
+            "served_exactly_once": (
+                self.n_served == self.n_submitted
+                and set(self._served) == set(self._arrivals)),
+            "latency_ms": _dist_ms(lat),
+            "queue_delay_ms": _dist_ms(qd),
+            "span_s": span,
+            "signals_per_sec": (self.n_served / span) if span > 0 else 0.0,
+            "n_batches": len(self.batches),
+            "mean_batch_occupancy": (
+                float(occ.mean()) if len(occ) else 0.0),
+            "padding_waste": (
+                float((buckets - occ).sum() / total_rows)
+                if total_rows else 0.0),
+        }
+
+    def per_key_counts(self) -> Dict[str, Dict[str, int]]:
+        """{key label: {n_batches, n_requests}} — the isolation view."""
+        out: Dict[str, Dict[str, int]] = {}
+        for b in self.batches:
+            d = out.setdefault(b.key.label(),
+                               {"n_batches": 0, "n_requests": 0})
+            d["n_batches"] += 1
+            d["n_requests"] += b.occupancy
+        return out
+
+
+def _dist_ms(samples: np.ndarray) -> Dict[str, Optional[float]]:
+    if not len(samples):
+        return {"p50": None, "p99": None, "mean": None, "max": None}
+    ms = samples * 1e3
+    return {
+        "p50": float(np.percentile(ms, 50)),
+        "p99": float(np.percentile(ms, 99)),
+        "mean": float(ms.mean()),
+        "max": float(ms.max()),
+    }

@@ -1,6 +1,13 @@
 """ExecutionPlan.compiled()/compiled_solve() cache-key audit: every kwarg
 that changes the traced program must be part of the memo key, and repeat
-lookups with identical kwargs must return the SAME jitted callable."""
+lookups with identical kwargs must return the SAME jitted callable.
+
+The serving-safety section audits the engine's call pattern on top:
+concurrent bucket sizes B must land in DISTINCT compiled entries (jax's
+per-shape cache under the one memoized wrapper) without colliding across
+`vmem_budget=` or aliasing bool/int kwarg values, and repeats at any
+enumerated bucket must never retrace."""
+import dataclasses
 import logging
 
 import jax
@@ -10,6 +17,7 @@ import pytest
 
 from repro.core import graph, wavelets
 from repro.dist import GraphOperator
+from repro.dist.operator import canonical_kwarg, canonical_solve_items
 
 
 @pytest.fixture(scope="module")
@@ -70,6 +78,98 @@ def test_compiled_solve_array_kwargs_key_by_value(op, y):
     assert f1 is plan.compiled_solve("jacobi", tau=0.5,
                                      den_diag=d1.copy())
     assert not np.allclose(np.asarray(f1(y)), np.asarray(f2(y)))
+
+
+def test_canonical_kwarg_bool_int_no_alias():
+    """True == 1 in Python (and hashes equal): without the bool tag the
+    memo would hand the int-keyed caller the bool-compiled entry."""
+    assert canonical_kwarg(True) != canonical_kwarg(1)
+    assert canonical_kwarg(False) != canonical_kwarg(0)
+    assert canonical_kwarg(True) == canonical_kwarg(True)
+    assert canonical_solve_items({"a": 1, "b": True}) \
+        != canonical_solve_items({"a": True, "b": 1})
+
+
+# ---------------------------------------------------------------------------
+# Serving safety: the engine's bucketed call pattern
+# ---------------------------------------------------------------------------
+def _counting_plan(plan):
+    """plan clone whose apply counts traces (runs at trace time only)."""
+    traces = []
+    orig = plan.apply
+
+    def counting_apply(x):
+        traces.append(1)
+        return orig(x)
+
+    return dataclasses.replace(plan, apply=counting_apply), traces
+
+
+def test_bucketed_callables_distinct_buckets_no_retrace(op, y):
+    """The engine's exact call pattern: warm the bucket set, then serve
+    interleaved bucket sizes repeatedly — each bucket traces exactly
+    once (its own compiled entry), repeats hit the cache."""
+    plan, traces = _counting_plan(op.plan("dense"))
+    n = y.shape[0]
+    fns = plan.bucketed_callables((1, 8), kinds=("apply",), warm=True)
+    assert set(fns) == {("apply", 1), ("apply", 8)}
+    # one memoized wrapper, two per-shape compiled entries
+    assert fns[("apply", 1)] is fns[("apply", 8)]
+    assert fns[("apply", 1)] is plan.compiled("apply")
+    assert len(traces) == 2                       # one trace per bucket
+    f1 = jnp.zeros((1, n), jnp.float32)
+    f8 = jnp.zeros((8, n), jnp.float32)
+    for _ in range(3):                            # serving steady state
+        fns[("apply", 1)](f1)
+        fns[("apply", 8)](f8)
+    assert len(traces) == 2                       # zero retraces
+    # distinct buckets really are distinct entries: B=1 and B=8 disagree
+    # in output shape, so a collision would be a shape error, not reuse
+    assert fns[("apply", 1)](f1).shape[0] == 1
+    assert fns[("apply", 8)](f8).shape[0] == 8
+
+
+def test_bucketed_callables_solve_specs_and_validation(op, y):
+    plan = op.plan("dense")
+    n = y.shape[0]
+    fns = plan.bucketed_callables(
+        (1, 4), kinds=(), solve_specs=[("jacobi", {"tau": 0.5})],
+        warm=True)
+    label = ("solve", "jacobi") + canonical_solve_items({"tau": 0.5})
+    assert set(fns) == {(label, 1), (label, 4)}
+    assert fns[(label, 1)] is plan.compiled_solve("jacobi", tau=0.5)
+    out = fns[(label, 4)](jnp.stack([y] * 4))
+    np.testing.assert_allclose(
+        np.asarray(out[0]),
+        np.asarray(plan.solve(y, "jacobi", tau=0.5).x), atol=1e-5)
+    with pytest.raises(ValueError, match="buckets"):
+        plan.bucketed_callables((0, 4))
+    with pytest.raises(KeyError, match="unknown kind"):
+        plan.bucketed_callables((1,), kinds=("nope",))
+
+
+def test_vmem_budget_times_bucket_no_collision(op, y):
+    """Serving two buckets of two vmem_budget variants concurrently: four
+    distinct compiled programs, zero cross-contamination — the budget is
+    part of the memo key, the bucket is part of jax's shape key."""
+    plan = op.plan("dense")
+    fa = plan.compiled_solve("jacobi", tau=0.5)
+    fb = plan.compiled_solve("jacobi", tau=0.5, vmem_budget=4096)
+    assert fa is not fb
+    y1 = y[None]
+    y8 = jnp.stack([y] * 8)
+    outs = [fa(y1), fb(y1), fa(y8), fb(y8)]       # interleaved buckets
+    assert [o.shape[0] for o in outs] == [1, 1, 8, 8]
+    # identical math either way (the budget changes execution, not
+    # results), and the b=8 rows replicate the b=1 answer
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(outs[2][7]),
+                               np.asarray(outs[0][0]),
+                               rtol=1e-6, atol=1e-7)
+    # repeats return the SAME callables (no memo churn under load)
+    assert plan.compiled_solve("jacobi", tau=0.5) is fa
+    assert plan.compiled_solve("jacobi", tau=0.5, vmem_budget=4096) is fb
 
 
 def test_solve_vmem_budget_forces_logged_fallback(op, y, caplog):

@@ -5,9 +5,10 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core import chebyshev as cheb
-from repro.core import filters, graph, lasso
+from repro.core import filters, graph, lasso, wavelets
 from repro.core.multiplier import graph_multiplier
-from repro.dist import gossip
+from repro.dist import GraphOperator, gossip
+from repro import serve
 
 SET = dict(max_examples=15, deadline=None)
 
@@ -99,6 +100,122 @@ def test_gossip_consensus_filter_exact(n):
     c = gossip.consensus_coeffs(n)
     assert gossip.consensus_error(n, c) < 1e-6  # f32 eval floor
     assert len(c) == int(np.ceil(n / 2)) + 1
+
+
+# ---------------------------------------------------------------------------
+# Serving: pad-to-bucket coalescing is a lossless, correctly-routed bijection
+# ---------------------------------------------------------------------------
+_SERVE_CACHE = {}
+
+
+def _serve_fixture():
+    """Module-lazy shared (graph, plan): one compile pool across examples
+    (the engine's memoized callables make repeat draws cheap)."""
+    if not _SERVE_CACHE:
+        g, _ = graph.connected_sensor_graph(jax.random.PRNGKey(5), n=40,
+                                            theta=0.3, kappa=0.45)
+        lmax = g.lambda_max_bound()
+        op = GraphOperator(
+            P=g.laplacian(),
+            multipliers=wavelets.sgwt_multipliers(lmax, J=2),
+            lmax=lmax, K=5)
+        _SERVE_CACHE["g"] = g
+        _SERVE_CACHE["plan"] = op.plan("dense")
+    return _SERVE_CACHE["g"], _SERVE_CACHE["plan"]
+
+
+#: The heterogeneous request pool the randomized mixes draw from.
+_REQUEST_SPECS = (
+    dict(kind="apply"),
+    dict(kind="apply_gram"),
+    dict(kind="solve", method="jacobi", tau=0.3, n_iters=3),
+    dict(kind="solve", method="jacobi", tau=0.7, n_iters=5),
+    dict(kind="solve", method="chebyshev", tau=0.5, n_iters=4),
+)
+
+
+def _direct(plan, spec, signal):
+    if spec["kind"] == "solve":
+        kw = {k: v for k, v in spec.items() if k not in ("kind", "method")}
+        return plan.solve(signal, spec["method"], **kw).x
+    return getattr(plan, spec["kind"])(signal)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), n_rows=st.integers(1, 8),
+       headroom=st.integers(0, 4))
+def test_pack_unpack_lossless_roundtrip(seed, n_rows, headroom):
+    """unpack(pack(rows, bucket)) returns the rows BITWISE — padding to a
+    bucket moves values around, never through arithmetic."""
+    rng = np.random.RandomState(seed)
+    rows = [rng.standard_normal(7).astype(np.float32)
+            for _ in range(n_rows)]
+    bucket = n_rows + headroom
+    batch, n_valid = serve.pack_batch(rows, bucket)
+    assert batch.shape == (bucket, 7) and n_valid == n_rows
+    back = serve.unpack_batch(batch, n_valid)
+    for orig, row in zip(rows, back):
+        assert np.array_equal(np.asarray(row), orig)
+    # padded tail is exactly zero (linearity makes it discardable)
+    assert not np.any(np.asarray(batch)[n_rows:])
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 500), order=st.permutations(list(range(8))))
+def test_serving_random_mix_routes_every_response(seed, order):
+    """Seeded random request mixes (kinds x method x K x tau x arrival
+    order): every future resolves with ITS request's answer — coalescing
+    and pad/unpack never cross-route rows — and scheduling stays
+    exactly-once under any arrival permutation."""
+    g, plan = _serve_fixture()
+    rng = np.random.RandomState(seed)
+    specs = [_REQUEST_SPECS[rng.randint(len(_REQUEST_SPECS))]
+             for _ in range(len(order))]
+    signals = [rng.standard_normal(g.n_vertices).astype(np.float32)
+               for _ in range(len(order))]
+    eng = serve.ServeEngine(plan, buckets=(1, 2, 8), max_wait=0.004,
+                            clock=serve.VirtualClock(),
+                            sync_results=False)
+    futs = {}
+    for i in order:                      # permuted arrival order
+        eng.clock.advance(float(rng.uniform(0.0, 0.003)))
+        eng.poll()
+        futs[i] = eng.submit(signals[i], **specs[i])
+    eng.run_until_idle()
+    s = eng.metrics.summary()
+    assert s["served_exactly_once"] and s["n_served"] == len(order)
+    ids = {f.response.id for f in futs.values()}
+    assert len(ids) == len(order)        # one distinct id per request
+    for i, fut in futs.items():
+        want = np.asarray(_direct(plan, specs[i], jnp.asarray(signals[i])))
+        np.testing.assert_allclose(np.asarray(fut.result()), want,
+                                   rtol=1e-5, atol=1e-5)
+        # the response's key really describes the request it answered
+        assert fut.response.key.kind == specs[i]["kind"]
+        assert fut.response.key.method == specs[i].get("method")
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 200), n_req=st.integers(1, 12))
+def test_serving_batch_partition_covers_requests(seed, n_req):
+    """The dispatched batches partition the admitted requests: occupancy
+    sums to n_req, every bucket is a configured one, padding accounts
+    for the difference."""
+    g, plan = _serve_fixture()
+    rng = np.random.RandomState(seed)
+    eng = serve.ServeEngine(plan, buckets=(1, 4), max_wait=0.002,
+                            clock=serve.VirtualClock(),
+                            sync_results=False)
+    for i in range(n_req):
+        eng.clock.advance(float(rng.uniform(0.0, 0.004)))
+        eng.poll()
+        eng.submit(rng.standard_normal(g.n_vertices).astype(np.float32))
+    eng.run_until_idle()
+    batches = eng.metrics.batches
+    assert sum(b.occupancy for b in batches) == n_req
+    assert all(b.bucket in (1, 4) for b in batches)
+    assert all(0 <= b.padding < b.bucket for b in batches)
+    assert eng.pending_count == 0
 
 
 @settings(**SET)
