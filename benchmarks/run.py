@@ -14,6 +14,9 @@ and writes the repo-root ``BENCH_kernels.json`` with its
 ``speedup_sweep_vs_step`` gate value.  The `scaling` benchmark
 (bench_scaling) measures messages-per-apply with repro.dist.commstats and
 checks them against the paper's 2K|E| closed form across graph sizes.
+The `comm` benchmark additionally runs the compressed-exchange dtype sweep
+(`bench_comm.dtype_sweep`: measured bytes-per-round and accuracy per
+``exchange_dtype`` at 8 shards) and writes the repo-root BENCH_comm.json.
 The `throughput` benchmark (bench_throughput) sweeps batch sizes
 B in {1, 8, 64} through every backend's batched apply and writes the
 repo-root BENCH_throughput.json signals/sec trajectory.  The `fig2`
@@ -73,6 +76,23 @@ def main() -> None:
                         n_iters=300 if args.full else 120)
     if "comm" in wanted:
         bench_comm.run(backends=backends, json_dir=args.json_dir)
+        # compressed-exchange dtype sweep (8-shard subprocess when the
+        # current process is single-device); the tracked repo-root
+        # BENCH_comm.json is only rewritten by a default run, and the
+        # sweep only makes sense for the halo-exchange backends
+        import os
+
+        sharded = [b for b in (backends or bench_comm.DEFAULT_DTYPE_BACKENDS)
+                   if b in bench_comm.DEFAULT_DTYPE_BACKENDS]
+        if sharded:
+            if backends is None and args.json_dir == ".":
+                comm_json = bench_comm.DEFAULT_JSON
+            else:
+                comm_json = os.path.join(args.json_dir, "BENCH_comm.json")
+            bench_comm.dtype_sweep(backends=sharded, json_path=comm_json)
+        else:
+            print("# comm dtype sweep skipped: --backend lists no "
+                  "halo-exchange backend (halo, pallas_halo)", flush=True)
     if "kernels" in wanted:
         bench_kernels.run(backends=backends, json_dir=args.json_dir)
         # single-launch sweep vs per-order microbenchmark; the tracked

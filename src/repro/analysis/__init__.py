@@ -17,9 +17,10 @@ point is ``tools/lint_repro.py --check`` (CI's `lint` job); the rule
 catalogue lives in ARCHITECTURE.md ("Static invariants").
 """
 from .astlint import AST_RULES, lint_file, lint_source, lint_tree
-from .checks import (JAXPR_RULES, check_batch_schedule, check_comm_schedule,
-                     check_dtype_discipline, check_plan, check_vmem_budget,
-                     collective_schedule, pallas_footprint, perm_problems)
+from .checks import (DTYPE_MIXED_OK, JAXPR_RULES, check_batch_schedule,
+                     check_comm_schedule, check_dtype_discipline, check_plan,
+                     check_vmem_budget, collective_schedule, pallas_footprint,
+                     perm_problems)
 from .findings import (AllowEntry, Allowlist, AllowlistError, Finding,
                        ScaffoldEntry)
 from .jaxpr_walk import (COLLECTIVE_PRIMITIVES, EqnContext, collect_eqns,
@@ -34,6 +35,7 @@ __all__ = [
     "Allowlist",
     "AllowlistError",
     "COLLECTIVE_PRIMITIVES",
+    "DTYPE_MIXED_OK",
     "EqnContext",
     "Finding",
     "JAXPR_RULES",

@@ -29,7 +29,11 @@ now only re-verified where a test author remembered to assert it:
   unit paths); ``JX-DTYPE-PROMOTION``: no op silently mixes real floating
   widths (e.g. a bf16 constant meeting f32 state promotes the whole
   recurrence).  Complex dtypes are exempt — the ARMA solver mixes
-  complex64 poles with f32 signals by design.
+  complex64 poles with f32 signals by design.  ``JX-DTYPE-MIXED-OK``:
+  the sanctioned-site carve-out for PROMOTION — :data:`DTYPE_MIXED_OK`
+  names the source paths where mixing widths is intentional (the
+  mixed-precision sweep kernels), with the justification recorded as
+  rule metadata instead of `tools/lint_allowlist.txt` entries.
 
 :func:`check_plan` bundles all of the above for one `ExecutionPlan`;
 `tools/lint_repro.py` runs it across every registered backend.
@@ -53,6 +57,22 @@ JAXPR_RULES = (
     "JX-VMEM-BUDGET",
     "JX-DTYPE-F64",
     "JX-DTYPE-PROMOTION",
+    "JX-DTYPE-MIXED-OK",
+)
+
+#: Sanctioned mixed-float-width sites (rule ``JX-DTYPE-MIXED-OK``): source
+#: paths where ``JX-DTYPE-PROMOTION`` findings are suppressed because the
+#: width mix is the *point* of the code, with the justification recorded
+#: here instead of as opaque `tools/lint_allowlist.txt` entries.  Each
+#: entry is ``(path fragment, why)``; a PROMOTION finding whose source
+#: location contains the fragment is dropped (when ``mixed_ok=True``).
+#: Keep this list tight — every fragment is a hole in the lint.
+DTYPE_MIXED_OK = (
+    ("repro/kernels/cheb_sweep.py",
+     "mixed-precision sweep kernels: bf16 blocks/iterate scratch feed an "
+     "f32 coefficient table and f32 accumulator (scratch_dtype='bf16', "
+     "preferred_element_type=f32) — the pallas_call operands legitimately "
+     "span two widths"),
 )
 
 
@@ -259,10 +279,26 @@ def _float_dtypes(vars_) -> List[np.dtype]:
     return out
 
 
+def _mixed_ok_site(eqn) -> bool:
+    """True when `eqn`'s source location is a :data:`DTYPE_MIXED_OK` site."""
+    path, _line = source_location(eqn)
+    if not path:
+        return False
+    return any(frag in path for frag, _why in DTYPE_MIXED_OK)
+
+
 def check_dtype_discipline(fn: Callable, *example_args,
-                           label: str = "fn") -> List[Finding]:
+                           label: str = "fn",
+                           mixed_ok: bool = True) -> List[Finding]:
     """JX-DTYPE-F64 + JX-DTYPE-PROMOTION over a traced `fn` (see module
-    docstring for rule semantics; complex dtypes are exempt by design)."""
+    docstring for rule semantics; complex dtypes are exempt by design).
+
+    ``mixed_ok=True`` (default) silently drops PROMOTION findings whose
+    source location is a sanctioned :data:`DTYPE_MIXED_OK` site — the
+    carve-out is metadata here, not an allowlist entry, so the
+    justification travels with the rule.  Pass ``mixed_ok=False`` to see
+    the raw findings (used by the carve-out's own tests).
+    """
     closed = jax.make_jaxpr(fn)(*example_args)
     findings: List[Finding] = []
 
@@ -278,6 +314,8 @@ def check_dtype_discipline(fn: Callable, *example_args,
                 "payload and leaves the f32 unit paths"))
         if eqn.primitive.name != "convert_element_type" \
                 and len({d.itemsize for d in in_f}) > 1:
+            if mixed_ok and _mixed_ok_site(eqn):
+                return
             findings.append(_finding(
                 "JX-DTYPE-PROMOTION", eqn, label,
                 f"`{eqn.primitive.name}` mixes real floating widths "

@@ -28,6 +28,24 @@ Array = jax.Array
 MatVec = Callable[[Array], Array]
 
 
+def _stateful_matvec(matvec: MatVec, x: Array):
+    """Adapt `matvec` to the dual-signature stateful protocol.
+
+    Matvecs that carry cross-order state (the int8 error-feedback halo
+    exchange in `repro.dist.quantize` / `dist.backends.halo`) expose an
+    ``init_state(x)`` attribute and accept ``matvec(x, state) ->
+    (y, state)``.  Plain matvecs keep their stateless signature and get
+    an empty-state shim, so every recurrence below threads state
+    uniformly through its scan carry at zero cost for the common case.
+
+    Returns ``(mv2, state0)`` with ``mv2(v, s) -> (y, s')``.
+    """
+    init_state = getattr(matvec, "init_state", None)
+    if init_state is None:
+        return (lambda v, s: (matvec(v), s)), ()
+    return matvec, init_state(x)
+
+
 # ---------------------------------------------------------------------------
 # Coefficients — Eq. (14)
 # ---------------------------------------------------------------------------
@@ -152,19 +170,23 @@ def cheb_apply(
     if K == 0:
         return acc[..., 0, :] if single else acc
 
+    mv2, st = _stateful_matvec(matvec, x)
     # Tbar_1(P) x = (P x)/alpha - x     (Algorithm 1 line 5)
-    t1 = matvec(x) / alpha - x
+    px, st = mv2(x, st)
+    t1 = px / alpha - x
     acc = acc + _outer(c[:, 1], t1)
 
     if K >= 2:
         def body(carry, ck):
-            t_km1, t_km2, acc = carry
+            t_km1, t_km2, acc, st = carry
             # Tbar_k = (2/alpha) P t_{k-1} - 2 t_{k-1} - t_{k-2}   (line 9)
-            t_k = (2.0 / alpha) * matvec(t_km1) - 2.0 * t_km1 - t_km2
+            pt, st = mv2(t_km1, st)
+            t_k = (2.0 / alpha) * pt - 2.0 * t_km1 - t_km2
             acc = acc + _outer(ck, t_k)
-            return (t_k, t_km1, acc), None
+            return (t_k, t_km1, acc, st), None
 
-        (_, _, acc), _ = jax.lax.scan(body, (t1, t0, acc), c[:, 2:].T)
+        (_, _, acc, _), _ = jax.lax.scan(body, (t1, t0, acc, st),
+                                         c[:, 2:].T)
     return acc[..., 0, :] if single else acc
 
 
@@ -202,15 +224,19 @@ def cheb_apply_adjoint(
     acc = combine(0.5 * c[:, 0], t0)
     if K == 0:
         return acc
-    t1 = mv(a) / alpha - a
+    mv2, st = _stateful_matvec(mv, a)
+    pa, st = mv2(a, st)
+    t1 = pa / alpha - a
     acc = acc + combine(c[:, 1], t1)
     if K >= 2:
         def body(carry, ck):
-            t_km1, t_km2, acc = carry
-            t_k = (2.0 / alpha) * mv(t_km1) - 2.0 * t_km1 - t_km2
-            return (t_k, t_km1, acc + combine(ck, t_k)), None
+            t_km1, t_km2, acc, st = carry
+            pt, st = mv2(t_km1, st)
+            t_k = (2.0 / alpha) * pt - 2.0 * t_km1 - t_km2
+            return (t_k, t_km1, acc + combine(ck, t_k), st), None
 
-        (_, _, acc), _ = jax.lax.scan(body, (t1, t0, acc), c[:, 2:].T)
+        (_, _, acc, _), _ = jax.lax.scan(body, (t1, t0, acc, st),
+                                         c[:, 2:].T)
     return acc
 
 

@@ -98,16 +98,24 @@ def jacobi_solve(
     iterates (the Fig. 2 error-vs-budget hook).
     """
     from ..kernels import ops  # lazy: core stays importable without kernels
+    from .chebyshev import _stateful_matvec
 
     inv_d = _resolve_inv_diag(q_diag, inv_diag)
     x = jnp.zeros_like(y) if x0 is None else x0
+    # stateful-matvec protocol: an int8+error-feedback exchange carries its
+    # quantization residual across the rounds (converging iterates re-send
+    # nearly the same boundary tiles, so the residual cancels the
+    # otherwise-systematic rounding bias); plain matvecs ride a shim
+    mv2, st0 = _stateful_matvec(q_matvec, x)
 
-    def body(x, _):
-        x_new = ops.jacobi_update(q_matvec(x), x, x, y, inv_d,
+    def body(carry, _):
+        x, st = carry
+        qx, st = mv2(x, st)
+        x_new = ops.jacobi_update(qx, x, x, y, inv_d,
                                   w=1.0, s=0.0, use_pallas=use_pallas)
-        return x_new, x_new if return_history else None
+        return (x_new, st), x_new if return_history else None
 
-    x_final, hist = jax.lax.scan(body, x, None, length=n_iters)
+    (x_final, _), hist = jax.lax.scan(body, (x, st0), None, length=n_iters)
     if return_history:
         return x_final, hist
     return x_final
@@ -131,29 +139,35 @@ def jacobi_chebyshev_solve(
     :func:`jacobi_solve`; each iteration costs exactly one `q_matvec`.
     """
     from ..kernels import ops
+    from .chebyshev import _stateful_matvec
 
     inv_d = _resolve_inv_diag(q_diag, inv_diag)
     x_prev = jnp.zeros_like(y) if x0 is None else x0
+    # same stateful-matvec protocol as jacobi_solve
+    mv2, st0 = _stateful_matvec(q_matvec, x_prev)
 
-    def jac_step(x):
-        return ops.jacobi_update(q_matvec(x), x, x, y, inv_d,
-                                 w=1.0, s=0.0, use_pallas=use_pallas)
+    def jac_step(x, st):
+        qx, st = mv2(x, st)
+        return ops.jacobi_update(qx, x, x, y, inv_d,
+                                 w=1.0, s=0.0, use_pallas=use_pallas), st
 
-    x = jac_step(x_prev)  # x^{(1)}
+    x, st0 = jac_step(x_prev, st0)  # x^{(1)}
     xi_prev, xi = 1.0, rho
 
     def body(carry, _):
-        x, x_prev, xi, xi_prev = carry
+        x, x_prev, xi, xi_prev, st = carry
         xi_next = 1.0 / (2.0 / (rho * xi) - 1.0 / xi_prev)
         w = 2.0 * xi_next / (rho * xi)
         s = xi_next / xi_prev
+        qx, st = mv2(x, st)
         # x_next = w * (x + inv_d (y - Q x)) - s * x_prev    (Eq. (25))
-        x_next = ops.jacobi_update(q_matvec(x), x, x_prev, y, inv_d,
+        x_next = ops.jacobi_update(qx, x, x_prev, y, inv_d,
                                    w=w, s=s, use_pallas=use_pallas)
-        return (x_next, x, xi_next, xi), (x_next if return_history else None)
+        return ((x_next, x, xi_next, xi, st),
+                (x_next if return_history else None))
 
-    (x_final, _, _, _), hist = jax.lax.scan(
-        body, (x, x_prev, jnp.asarray(xi), jnp.asarray(xi_prev)), None,
+    (x_final, _, _, _, _), hist = jax.lax.scan(
+        body, (x, x_prev, jnp.asarray(xi), jnp.asarray(xi_prev), st0), None,
         length=max(n_iters - 1, 0),
     )
     if return_history:

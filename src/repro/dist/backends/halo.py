@@ -37,6 +37,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ... import _compat  # noqa: F401  (jax.shard_map / axis_size on old jax)
 from ...core import chebyshev as cheb
 from ...core.lasso import soft_threshold
+from .. import quantize
 from . import register_backend
 
 shard_map = jax.shard_map
@@ -173,47 +174,90 @@ def _vspec(ndim: int, axis: str) -> P:
 # ---------------------------------------------------------------------------
 # Local matvecs (run inside shard_map)
 # ---------------------------------------------------------------------------
-def _halo_matvec(diag, left, right, nl: int, h: int, axis: str):
+def _halo_matvec(diag, left, right, nl: int, h: int, axis: str,
+                 exchange_dtype: str = "f32", error_feedback: bool = True):
     """Interior/boundary-split matvec along the *last* axis of x.
 
     x: (..., nl) local block; left/right are the (nl, h) boundary
     couplings from :meth:`BandedPartition.boundary_couplings`.  Per call:
 
-    1. **boundary tiles on the wire first** — the first/last h entries
-       ppermute to the ring neighbours (lines 6-7 of Algorithm 1);
+    1. **boundary tiles encoded and on the wire first** — the first/last
+       h entries are compressed to `exchange_dtype` (identity for f32,
+       truncating cast for bf16, per-tile-scale int8 with the scale
+       bitcast-packed into the same buffer — see `repro.dist.quantize`)
+       and ppermute to the ring neighbours (lines 6-7 of Algorithm 1);
     2. **interior compute while the exchange is in flight** — the
        diagonal-block product needs no remote data, so it overlaps the
        collective under an async-collective scheduler;
-    3. **boundary coupling on arrival** — two (nl, h) products against
-       the received tiles.
+    3. **decode + boundary coupling on arrival** — the received tiles
+       widen back to the compute dtype, then two (nl, h) products.
+
+    Under ``exchange_dtype="int8"`` with ``error_feedback=True`` (and a
+    real multi-shard axis) the returned closure is *stateful-capable*:
+    ``mv(x)`` stays the plain stateless signature (plain quantize), while
+    ``mv(x, state) -> (y, state)`` threads the quantization residual of
+    each boundary tile into the next round, and ``mv.init_state(x)``
+    builds the zero residuals.  `core.chebyshev` / `kernels.ops` opt in
+    via ``getattr(matvec, "init_state", None)``.
 
     The permute indices form a ring; the first/last shard's out-of-range
     contribution is killed by the zero left/right coupling blocks
     (partition_banded leaves left[0] = right[-1] = 0).
     """
     size = jax.lax.axis_size(axis)
+    dt = quantize.validate_exchange_dtype(exchange_dtype)
 
-    def mv(x: Array) -> Array:
+    def _run(x, state):
         head = x[..., :h]
         tail = x[..., nl - h:nl]
         if size > 1:
+            if state is None:
+                wire_tail = quantize.encode(tail, dt)
+                wire_head = quantize.encode(head, dt)
+                new_state = None
+            else:
+                r_tail, r_head = state
+                wire_tail, r_tail = quantize.ef_encode(tail, r_tail, dt)
+                wire_head, r_head = quantize.ef_encode(head, r_head, dt)
+                new_state = (r_tail, r_head)
             # (1) issue the boundary-tile exchange: shard s receives s-1's
-            # tail (read by `left`) and s+1's head (read by `right`)
+            # tail (read by `left`) and s+1's head (read by `right`).
+            # One ppermute per direction — the int8 scale rides inside the
+            # wire buffer, so measured rounds stay the paper's 2K|E|.
             from_left = jax.lax.ppermute(
-                tail, axis, perm=[(i, (i + 1) % size) for i in range(size)]
+                wire_tail, axis,
+                perm=[(i, (i + 1) % size) for i in range(size)]
             )
             from_right = jax.lax.ppermute(
-                head, axis, perm=[(i, (i - 1) % size) for i in range(size)]
+                wire_head, axis,
+                perm=[(i, (i - 1) % size) for i in range(size)]
             )
+            # (2) interior: depends only on local data — overlaps the
+            # exchange
+            y = jnp.einsum("ij,...j->...i", diag, x)
+            # (3) decode + boundary coupling, consumed after the interior
+            # product
+            from_left = quantize.decode(from_left, dt, x.dtype)
+            from_right = quantize.decode(from_right, dt, x.dtype)
         else:
             from_left, from_right = tail, head
-        # (2) interior: depends only on local data — overlaps the exchange
-        y = jnp.einsum("ij,...j->...i", diag, x)
-        # (3) boundary: consumed after the interior product
+            new_state = state
+            y = jnp.einsum("ij,...j->...i", diag, x)
         y = y + jnp.einsum("ij,...j->...i", left, from_left)
         y = y + jnp.einsum("ij,...j->...i", right, from_right)
-        return y
+        return y, new_state
 
+    def mv(x, state=None):
+        if state is None:
+            return _run(x, None)[0]
+        return _run(x, state)
+
+    if dt == "int8" and error_feedback and size > 1:
+        def init_state(x):
+            return (quantize.ef_init(x[..., nl - h:nl]),
+                    quantize.ef_init(x[..., :h]))
+
+        mv.init_state = init_state
     return mv
 
 
@@ -232,6 +276,8 @@ def dist_cheb_apply(
     coeffs: Union[Array, np.ndarray],
     lmax: float,
     axis: str = "graph",
+    exchange_dtype: str = "f32",
+    error_feedback: bool = True,
 ) -> Array:
     """Sharded Phi_tilde x (Algorithm 1). x: (..., n_padded) — leading batch
     dims ride the same K halo-exchange rounds ((B, nl) boundary tiles move
@@ -251,7 +297,8 @@ def dist_cheb_apply(
         check_vma=False,
     )
     def run(diag, left, right, xl, c):
-        mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis)
+        mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis,
+                          exchange_dtype, error_feedback)
         return cheb.cheb_apply(mv, xl, c, lmax)
 
     out = run(parts.diag, left_h, right_h, x, c)
@@ -265,6 +312,8 @@ def dist_cheb_apply_adjoint(
     coeffs: Union[Array, np.ndarray],
     lmax: float,
     axis: str = "graph",
+    exchange_dtype: str = "f32",
+    error_feedback: bool = True,
 ) -> Array:
     """Sharded Phi_tilde^* a (Algorithm 2). a: (..., eta, n_padded) ->
     (..., n_padded); one ppermute pair moves all eta streams (and every
@@ -274,7 +323,8 @@ def dist_cheb_apply_adjoint(
     left_h, right_h = parts.boundary_couplings()
 
     def run(diag, left, right, al, c):
-        mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis)
+        mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis,
+                          exchange_dtype, error_feedback)
         return cheb.cheb_apply_adjoint(mv, al, c, lmax)
 
     return _sharded(
@@ -291,6 +341,8 @@ def dist_cheb_apply_gram(
     coeffs: np.ndarray,
     lmax: float,
     axis: str = "graph",
+    exchange_dtype: str = "f32",
+    error_feedback: bool = True,
 ) -> Array:
     """Sharded Phi~*Phi~ x via product coefficients (Section IV-C).
     x: (..., n_padded) -> (..., n_padded)."""
@@ -299,7 +351,8 @@ def dist_cheb_apply_gram(
     left_h, right_h = parts.boundary_couplings()
 
     def run(diag, left, right, xl, d):
-        mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis)
+        mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis,
+                          exchange_dtype, error_feedback)
         return cheb.cheb_apply(mv, xl, d, lmax)
 
     return _sharded(
@@ -319,6 +372,8 @@ def dist_lasso(
     gamma: float = 0.2,
     n_iters: int = 300,
     axis: str = "graph",
+    exchange_dtype: str = "f32",
+    error_feedback: bool = True,
 ) -> Tuple[Array, Array]:
     """Fully sharded Algorithm 3 (distributed lasso).
 
@@ -339,7 +394,8 @@ def dist_lasso(
     left_h, right_h = parts.boundary_couplings()
 
     def run(diag, left, right, yl, c, thresh):
-        mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis)
+        mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis,
+                          exchange_dtype, error_feedback)
         phi_y = cheb.cheb_apply(mv, yl, c, lmax)  # Alg. 3 line 3
 
         def body(a, _):
@@ -362,15 +418,23 @@ def dist_lasso(
 
 
 def halo_bytes_per_apply(parts: BandedPartition, K: int, eta: int = 1,
-                         dtype_bytes: int = 4) -> int:
+                         dtype_bytes: int = 4,
+                         exchange_dtype: Optional[str] = None) -> int:
     """Collective-traffic model for one sharded application: per Chebyshev
-    order each shard sends its h-row boundary tile left+right
-    (2 * h * eta * bytes, h = the partition's coupling bandwidth), K
-    rounds, n_shards shards.  The TPU analog of the paper's 2K|E| message
-    bound — the interior/boundary split shrank the payload from the full
-    nl block to the h rows a neighbour actually reads, while the round
-    count (what the paper-level accounting measures) is unchanged."""
-    return 2 * K * parts.n_shards * parts.halo * eta * dtype_bytes
+    order each shard sends its h-row boundary tile left+right, K rounds,
+    n_shards shards.  The TPU analog of the paper's 2K|E| message bound —
+    the interior/boundary split shrank the payload from the full nl block
+    to the h rows a neighbour actually reads, and the compressed exchange
+    (`exchange_dtype=`) shrinks each row from 4h bytes (f32) to 2h (bf16)
+    or h + 4 (int8 payload + packed scale; `quantize.tile_wire_bytes`),
+    while the round count (what the paper-level accounting measures) is
+    unchanged.  `dtype_bytes` is the legacy per-element width used when
+    `exchange_dtype` is not given."""
+    if exchange_dtype is not None:
+        row = quantize.tile_wire_bytes(parts.halo, exchange_dtype)
+    else:
+        row = parts.halo * dtype_bytes
+    return 2 * K * parts.n_shards * eta * row
 
 
 # ---------------------------------------------------------------------------
@@ -378,7 +442,8 @@ def halo_bytes_per_apply(parts: BandedPartition, K: int, eta: int = 1,
 # ---------------------------------------------------------------------------
 @register_backend("halo")
 def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
-          allow_leak: bool = False, **options):
+          allow_leak: bool = False, exchange_dtype: str = "f32",
+          error_feedback: bool = True, **options):
     """Build an ExecutionPlan running every application inside a shard_map
     over `mesh` with ring halo exchange.
 
@@ -386,9 +451,15 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
     must be leak-free (spatially sorted graph) unless ``allow_leak=True`` —
     otherwise use the 'allgather' backend.  Without `mesh=`, a 1-D "graph"
     mesh over every visible device is built.
+
+    ``exchange_dtype`` selects the wire precision of the boundary tiles
+    ("f32" | "bf16" | "int8", see `repro.dist.quantize`);
+    ``error_feedback`` (int8 only) threads the per-tile quantization
+    residual across the K orders.
     """
     from ..operator import ExecutionPlan
 
+    quantize.validate_exchange_dtype(exchange_dtype)
     if mesh is None:
         mesh = jax.make_mesh((len(jax.devices()),), ("graph",))
     axis = axis or mesh.axis_names[0]
@@ -412,23 +483,27 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
     def apply(f: Array) -> Array:
         out = dist_cheb_apply(mesh, parts, pad_signal(f, parts),
                               jnp.atleast_2d(jnp.asarray(coeffs, f.dtype)),
-                              lmax, axis)
+                              lmax, axis, exchange_dtype, error_feedback)
         return out[..., :n]
 
     def apply_adjoint(a: Array) -> Array:
-        return dist_cheb_apply_adjoint(mesh, parts, pad_signal(a, parts),
-                                       coeffs, lmax, axis)[..., :n]
+        return dist_cheb_apply_adjoint(
+            mesh, parts, pad_signal(a, parts), coeffs, lmax, axis,
+            exchange_dtype, error_feedback)[..., :n]
 
     def apply_gram(f: Array) -> Array:
-        return dist_cheb_apply_gram(mesh, parts, pad_signal(f, parts),
-                                    coeffs, lmax, axis)[..., :n]
+        return dist_cheb_apply_gram(
+            mesh, parts, pad_signal(f, parts), coeffs, lmax, axis,
+            exchange_dtype, error_feedback)[..., :n]
 
     def solve_lasso(y, mu, gamma, n_iters):
         from ...core.lasso import LassoResult
 
         a_star, y_star = dist_lasso(mesh, parts, pad_signal(y, parts),
                                     coeffs, lmax, mu, gamma=gamma,
-                                    n_iters=n_iters, axis=axis)
+                                    n_iters=n_iters, axis=axis,
+                                    exchange_dtype=exchange_dtype,
+                                    error_feedback=error_feedback)
         return LassoResult(coeffs=a_star[..., :n], signal=y_star[..., :n],
                            objective=jnp.nan, n_iters=n_iters, fused=True)
 
@@ -451,7 +526,8 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
                                  out_sds)
 
         def run(diag, left, right, *rest):
-            mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis)
+            mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis,
+                              exchange_dtype, error_feedback)
             return fn(mv, *rest)
 
         left_h, right_h = parts.boundary_couplings()
@@ -470,10 +546,13 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
             "n_local": nl,
             "halo_width": h,
             "partition_leak": leak,
+            "exchange_dtype": exchange_dtype,
+            "error_feedback": bool(error_feedback),
             # forward/gram ship an eta-independent (..., h) tile per order;
             # only the adjoint's iterate carries the eta streams
-            "halo_bytes_per_apply": halo_bytes_per_apply(parts, op.K, 1),
-            "halo_bytes_per_adjoint": halo_bytes_per_apply(parts, op.K,
-                                                           op.eta),
+            "halo_bytes_per_apply": halo_bytes_per_apply(
+                parts, op.K, 1, exchange_dtype=exchange_dtype),
+            "halo_bytes_per_adjoint": halo_bytes_per_apply(
+                parts, op.K, op.eta, exchange_dtype=exchange_dtype),
         },
     )

@@ -34,7 +34,8 @@ Array = jax.Array
 @register_backend("pallas")
 def build(op, *, mesh=None, partition=None, block: Tuple[int, int] = (8, 128),
           use_pallas: Optional[bool] = True, sweep: Optional[bool] = None,
-          vmem_budget: Optional[int] = None, **options):
+          vmem_budget: Optional[int] = None,
+          sweep_dtype: Optional[str] = None, **options):
     from ..operator import ExecutionPlan
 
     del mesh, partition  # single-device backend
@@ -60,12 +61,14 @@ def build(op, *, mesh=None, partition=None, block: Tuple[int, int] = (8, 128),
         # whole iterations into the single-launch sweep kernels
         _mv.block_ell = A
         _mv.vmem_budget = vmem_budget
+        _mv.sweep_dtype = sweep_dtype
 
     def apply(f: Array) -> Array:
         c2 = np.atleast_2d(np.asarray(coeffs))
         out = ops.fused_cheb_apply(A, _pad(f), c2, lmax,
                                    use_pallas=use_pallas, sweep=sweep,
-                                   vmem_budget=vmem_budget)
+                                   vmem_budget=vmem_budget,
+                                   scratch_dtype=sweep_dtype)
         return out[..., :n]
 
     def apply_adjoint(a: Array) -> Array:
@@ -77,7 +80,8 @@ def build(op, *, mesh=None, partition=None, block: Tuple[int, int] = (8, 128),
         d = cheb.gram_coeffs(coeffs)
         out = ops.fused_cheb_apply(A, _pad(f), d[None], lmax,
                                    use_pallas=use_pallas, sweep=sweep,
-                                   vmem_budget=vmem_budget)
+                                   vmem_budget=vmem_budget,
+                                   scratch_dtype=sweep_dtype)
         return out[..., 0, :n]
 
     def matvec_runner(fn, signals, consts=()):
@@ -100,8 +104,9 @@ def build(op, *, mesh=None, partition=None, block: Tuple[int, int] = (8, 128),
             "flops_per_matvec": (
                 None if nnz_blocks is None
                 else nnz_blocks * 2 * block[0] * block[1]),
+            "sweep_dtype": sweep_dtype or "f32",
             "sweep_vmem_bytes": ops.cheb_sweep_vmem_bytes(
-                A, total, op.eta, op.K),
+                A, total, op.eta, op.K, scratch_dtype=sweep_dtype),
             "sweep_vmem_budget": (ops.DEFAULT_SWEEP_VMEM_BUDGET
                                   if vmem_budget is None else vmem_budget),
         },

@@ -60,6 +60,7 @@ from ...core import chebyshev as cheb
 from ...core import graph as graphmod
 from ...core.lasso import soft_threshold
 from ...kernels import ops
+from .. import quantize
 from ..sharding import ShardingRules, make_rules
 from . import register_backend
 from .halo import (BandedPartition, _coupling_bandwidth, _sharded,
@@ -159,7 +160,10 @@ def partition_block_ell(
 # ---------------------------------------------------------------------------
 def _halo_row_matvec(local_A: graphmod.BlockELL, left: Array, right: Array,
                      nl: int, h: int, axis: str, use_pallas,
-                     vmem_budget=None, n_shards=None):
+                     vmem_budget=None, n_shards=None,
+                     exchange_dtype: str = "f32",
+                     error_feedback: bool = True,
+                     sweep_dtype: Optional[str] = None):
     """Interior/boundary-split matvec along the last axis of x.
 
     x: (..., pnl) local block on the shard's **Block-ELL padded domain**
@@ -167,60 +171,108 @@ def _halo_row_matvec(local_A: graphmod.BlockELL, left: Array, right: Array,
     order — rows past nl are zero and stay zero).  left/right are the
     boundary couplings row-padded to (pnl, h).  Per call:
 
-    1. **boundary tiles on the wire first** — each shard ppermutes its
-       first/last h *logical* entries to its ring neighbours (the only
+    1. **boundary tiles encoded and on the wire first** — each shard's
+       first/last h *logical* entries are compressed to `exchange_dtype`
+       (`repro.dist.quantize`: identity for f32, truncating cast for
+       bf16, per-tile-scale int8 with the scale bitcast-packed into the
+       same wire buffer) and ppermute to the ring neighbours (the only
        inter-shard traffic — a (..., h) tile, so B batched signals ship
        (B, h) per direction in the same exchange round);
     2. **interior compute while the exchange is in flight** — the Pallas
        Block-ELL SpMV over the shard's diagonal block reads no remote
        data, so it overlaps the collective (batched tile path: one
        structure sweep for the whole batch);
-    3. **boundary coupling on arrival** — two small (pnl, h) dense
-       products against the received halo rows.
+    3. **decode + boundary coupling on arrival** — the received tiles
+       widen back to the compute dtype, then two small (pnl, h) dense
+       products.
+
+    Under ``exchange_dtype="int8"`` with ``error_feedback=True`` on a
+    real multi-shard axis, the closure follows the dual-signature
+    stateful protocol (see `halo._halo_matvec`): ``mv(x)`` stays
+    stateless (plain quantize), ``mv(x, state) -> (y, state)`` threads
+    the per-tile quantization residuals across orders, and
+    ``mv.init_state(x)`` builds the zero residuals.
 
     The ring wraps; the first/last shard's out-of-range contribution is
     killed by the zero left/right coupling blocks.  On a 1-shard mesh the
     exchange is a no-op and the returned closure is tagged with
     ``mv.block_ell`` so `ops.fused_cheb_recurrence` / the Section-V
     solvers collapse the whole iteration into a single-launch sweep
-    kernel (the couplings are identically zero there).
+    kernel (the couplings are identically zero there); ``mv.sweep_dtype``
+    forwards the mixed-precision scratch mode to those sweep kernels.
     """
     size = n_shards if n_shards is not None else jax.lax.axis_size(axis)
+    dt = quantize.validate_exchange_dtype(exchange_dtype)
 
-    def mv(x: Array) -> Array:
+    def _run(x, state):
         head = x[..., :h]
         tail = x[..., nl - h:nl]
         if size > 1:
+            if state is None:
+                wire_tail = quantize.encode(tail, dt)
+                wire_head = quantize.encode(head, dt)
+                new_state = None
+            else:
+                r_tail, r_head = state
+                wire_tail, r_tail = quantize.ef_encode(tail, r_tail, dt)
+                wire_head, r_head = quantize.ef_encode(head, r_head, dt)
+                new_state = (r_tail, r_head)
             # (1) boundary-row exchange: shard s receives s-1's tail (read
-            # by `left`) and s+1's head (read by `right`)
+            # by `left`) and s+1's head (read by `right`); one ppermute
+            # per direction keeps measured rounds at the paper's 2K|E|
             from_left = jax.lax.ppermute(
-                tail, axis, perm=[(i, (i + 1) % size) for i in range(size)])
+                wire_tail, axis,
+                perm=[(i, (i + 1) % size) for i in range(size)])
             from_right = jax.lax.ppermute(
-                head, axis, perm=[(i, (i - 1) % size) for i in range(size)])
+                wire_head, axis,
+                perm=[(i, (i - 1) % size) for i in range(size)])
+            # (2) interior Block-ELL SpMV — overlaps the exchange
+            y = ops.spmv(local_A, x, use_pallas=use_pallas)
+            # (3) decode + boundary couplings on arrival
+            from_left = quantize.decode(from_left, dt, x.dtype)
+            from_right = quantize.decode(from_right, dt, x.dtype)
         else:
             from_left, from_right = tail, head
-        # (2) interior Block-ELL SpMV — overlaps the exchange
-        y = ops.spmv(local_A, x, use_pallas=use_pallas)
-        # (3) boundary couplings on arrival
+            new_state = state
+            y = ops.spmv(local_A, x, use_pallas=use_pallas)
         y = y + jnp.einsum("ij,...j->...i", left, from_left)
         y = y + jnp.einsum("ij,...j->...i", right, from_right)
-        return y
+        return y, new_state
 
+    def mv(x, state=None):
+        if state is None:
+            return _run(x, None)[0]
+        return _run(x, state)
+
+    if dt == "int8" and error_feedback and size > 1:
+        def init_state(x):
+            return (quantize.ef_init(x[..., nl - h:nl]),
+                    quantize.ef_init(x[..., :h]))
+
+        mv.init_state = init_state
     if size == 1:
         mv.block_ell = local_A
         mv.vmem_budget = vmem_budget
+        mv.sweep_dtype = sweep_dtype
     return mv
 
 
 def pallas_halo_bytes_per_apply(parts: ShardedBlockELL, K: int, eta: int = 1,
-                                dtype_bytes: int = 4) -> int:
+                                dtype_bytes: int = 4,
+                                exchange_dtype: Optional[str] = None) -> int:
     """Collective-traffic model for one application: per order each shard
     sends its h boundary rows left+right; K orders, S shards.  Since the
     interior/boundary split, `halo.halo_bytes_per_apply` follows the same
     boundary-tile formula (it used to ship the full nl block); this one
     reads the width off a `ShardedBlockELL`, that one off a
-    `BandedPartition`."""
-    return 2 * K * parts.n_shards * parts.halo * eta * dtype_bytes
+    `BandedPartition`.  With `exchange_dtype` given, the per-row wire
+    width comes from `quantize.tile_wire_bytes` (4h / 2h / h + 4 bytes
+    for f32 / bf16 / int8+packed-scale) instead of ``h * dtype_bytes``."""
+    if exchange_dtype is not None:
+        row = quantize.tile_wire_bytes(parts.halo, exchange_dtype)
+    else:
+        row = parts.halo * dtype_bytes
+    return 2 * K * parts.n_shards * eta * row
 
 
 # ---------------------------------------------------------------------------
@@ -230,7 +282,9 @@ def pallas_halo_bytes_per_apply(parts: ShardedBlockELL, K: int, eta: int = 1,
 def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
           allow_leak: bool = False, block: Tuple[int, int] = (8, 128),
           use_pallas: Optional[bool] = None,
-          vmem_budget: Optional[int] = None, **options):
+          vmem_budget: Optional[int] = None,
+          exchange_dtype: str = "f32", error_feedback: bool = True,
+          sweep_dtype: Optional[str] = None, **options):
     """Build an ExecutionPlan running the fused Pallas Chebyshev recurrence
     per shard with boundary-row halo exchange.
 
@@ -242,9 +296,18 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
     `vmem_budget` overrides the single-launch sweep kernel's VMEM guard
     (`ops.DEFAULT_SWEEP_VMEM_BUDGET`) on 1-shard meshes, where the whole
     per-shard recurrence collapses into one `cheb_sweep` launch.
+
+    ``exchange_dtype`` ("f32" | "bf16" | "int8") sets the wire precision
+    of the boundary tiles and ``error_feedback`` (int8 only) threads the
+    quantization residual across orders — see `repro.dist.quantize`.
+    ``sweep_dtype`` (None/"f32" or "bf16") selects the mixed-precision
+    scratch mode of the single-launch sweep kernels; the plan's
+    ``sweep_vmem_bytes`` guard value is recomputed from the actual
+    scratch dtype, so bf16 roughly doubles the admissible tile.
     """
     from ..operator import ExecutionPlan
 
+    quantize.validate_exchange_dtype(exchange_dtype)
     if mesh is None:
         mesh = jax.make_mesh((len(jax.devices()),), ("graph",))
     axis = axis or mesh.axis_names[0]
@@ -285,7 +348,8 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
         local_A = graphmod.BlockELL(blocks=blocks[0], indices=indices[0],
                                     mask=mask[0], n=nl)
         return _halo_row_matvec(local_A, left[0], right[0], nl, h, axis,
-                                use_pallas, vmem_budget, n_shards)
+                                use_pallas, vmem_budget, n_shards,
+                                exchange_dtype, error_feedback, sweep_dtype)
 
     info = {
         "mesh_axis": axis,
@@ -296,14 +360,18 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
         "partition_leak": leak,
         "block": block,
         "nnz_blocks": parts.nnz_blocks,
+        "exchange_dtype": exchange_dtype,
+        "error_feedback": bool(error_feedback),
+        "sweep_dtype": sweep_dtype or "f32",
         "sweep_vmem_bytes": ops.cheb_sweep_vmem_bytes(
             graphmod.BlockELL(blocks=parts.blocks[0],
                               indices=parts.indices[0],
                               mask=parts.mask[0], n=nl),
-            pnl, op.eta, op.K),
-        "halo_bytes_per_apply": pallas_halo_bytes_per_apply(parts, op.K, 1),
+            pnl, op.eta, op.K, scratch_dtype=sweep_dtype),
+        "halo_bytes_per_apply": pallas_halo_bytes_per_apply(
+            parts, op.K, 1, exchange_dtype=exchange_dtype),
         "halo_bytes_per_adjoint": pallas_halo_bytes_per_apply(
-            parts, op.K, op.eta),
+            parts, op.K, op.eta, exchange_dtype=exchange_dtype),
     }
 
     if n_shards == 1:
@@ -313,7 +381,8 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
         # sweep dispatch (and its eager-dense CPU oracle) engages exactly
         # as in the `pallas` backend, minus the shard_map trace overhead.
         return _build_single_shard(op, parts, pnl, left_p, right_p,
-                                   use_pallas, vmem_budget, info)
+                                   use_pallas, vmem_budget, info,
+                                   sweep_dtype)
 
     # PartitionSpecs through the logical-axis rules: every per-shard tensor
     # is sharded on its leading "vertex"-block dimension.  The shared _BASE
@@ -445,7 +514,7 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
 
 
 def _build_single_shard(op, parts, pnl, left_p, right_p, use_pallas,
-                        vmem_budget, info):
+                        vmem_budget, info, sweep_dtype=None):
     """The 1-shard degenerate of the pallas_halo plan: same partition, same
     matvec (the zero boundary couplings included, so `plan.info` and the
     byte models stay comparable), but no shard_map and a concrete
@@ -461,7 +530,7 @@ def _build_single_shard(op, parts, pnl, left_p, right_p, use_pallas,
                                 mask=parts.mask[0], n=nl)
     mv = _halo_row_matvec(local_A, left_p[0], right_p[0], nl, h,
                           info["mesh_axis"], use_pallas, vmem_budget,
-                          n_shards=1)
+                          n_shards=1, sweep_dtype=sweep_dtype)
 
     def _pad(x):
         return ops.pad_trailing(jnp.asarray(x), pnl)

@@ -123,10 +123,15 @@ class ExecutionPlan:
         if kind not in fns:
             raise KeyError(f"unknown kind {kind!r}; available: "
                            f"{sorted(fns)}")
+        # The memo is per-plan, but the exchange precision still joins the
+        # key: plans rebuilt at a different ``exchange_dtype`` that share a
+        # cache (e.g. via copy/replace) must never serve each other's
+        # compiled entries.
+        key = (kind, self.info.get("exchange_dtype", "f32"))
         cache = self._jit_cache()
-        if kind not in cache:
-            cache[kind] = jax.jit(fns[kind])
-        return cache[kind]
+        if key not in cache:
+            cache[key] = jax.jit(fns[kind])
+        return cache[key]
 
     def compiled_solve(self, method: str = "chebyshev", **solve_kwargs):
         """Memoized jitted Section-V solver: ``y -> x`` (or ``(x, history)``
@@ -142,7 +147,8 @@ class ExecutionPlan:
         hold the returned callable in the request loop rather than calling
         ``compiled_solve(...)`` per request when passing large arrays.
         """
-        key = ("solve", method) + canonical_solve_items(solve_kwargs)
+        key = (("solve", method, self.info.get("exchange_dtype", "f32"))
+               + canonical_solve_items(solve_kwargs))
         cache = self._jit_cache()
         if key not in cache:
             history = bool(solve_kwargs.get("history", False))

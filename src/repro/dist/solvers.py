@@ -142,6 +142,34 @@ def poly_matvec(mv, coeffs: Tuple[float, ...], x: Array) -> Array:
     return acc
 
 
+def _poly_matvec_protocol(mv, coeffs: Tuple[float, ...]):
+    """:func:`poly_matvec` as a stateful-protocol matvec.
+
+    When `mv` carries the dual-signature error-feedback protocol
+    (``mv.init_state``; see `repro.core.chebyshev._stateful_matvec`), the
+    returned ``p(P)``-matvec forwards it so the iteration loops can thread
+    the quantizer residual through every Horner step.  Plain matvecs come
+    back as the plain closure.
+    """
+    init = getattr(mv, "init_state", None)
+    if init is None:
+        def pmv(x):
+            return poly_matvec(mv, coeffs, x)
+        return pmv
+
+    def pmv2(x, state=None):
+        if state is None:
+            return poly_matvec(mv, coeffs, x)
+        acc = coeffs[-1] * x
+        for c in reversed(coeffs[:-1]):
+            h, state = mv(acc, state)
+            acc = h + c * x
+        return acc, state
+
+    pmv2.init_state = init
+    return pmv2
+
+
 def _poly_diag(P_dense: np.ndarray, coeffs: Sequence[float]) -> np.ndarray:
     """diag(p(P)) for the Jacobi split, computed once at solve setup.
 
@@ -223,6 +251,7 @@ def _with_budget(mv, vmem_budget):
 
     wrapped.block_ell = mv.block_ell
     wrapped.vmem_budget = int(vmem_budget)
+    wrapped.sweep_dtype = getattr(mv, "sweep_dtype", None)
     return wrapped
 
 
@@ -451,10 +480,10 @@ def _solve_jacobi(plan, runner, y, num, den, K, method, rho, den_diag, x0,
                 return kops.fused_jacobi_sweep(
                     A_local, b, inv_dl, den, ws, x0=x0l,
                     use_pallas=use_pallas,
-                    vmem_budget=getattr(mv, "vmem_budget", None))
+                    vmem_budget=getattr(mv, "vmem_budget", None),
+                    scratch_dtype=getattr(mv, "sweep_dtype", None))
 
-        def a_mv(x):
-            return poly_matvec(mv, den, x)
+        a_mv = _poly_matvec_protocol(mv, den)
 
         if method == "jacobi":
             return _jacobi.jacobi_solve(

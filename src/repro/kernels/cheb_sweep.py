@@ -44,6 +44,15 @@ from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
+#: Sanctioned sweep scratch dtypes.  "bf16" is the mixed-precision mode:
+#: iterates / SpMV product / Block-ELL blocks live in bfloat16 VMEM (half
+#: the pinned footprint, so the ops-layer VMEM guard admits ~2x larger
+#: (B, n, eta) tiles), while every accumulator update runs in f32 — the
+#: MXU products via ``preferred_element_type=jnp.float32`` in
+#: :func:`_spmv_into`, the Chebyshev accumulator by explicit widening
+#: casts before each AXPY.
+SCRATCH_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
 
 def _spmv_into(idx_ref, blocks_ref, src_ref, dst_ref, *, nrb: int, slots: int,
                br: int, bc: int) -> None:
@@ -77,22 +86,29 @@ def _cheb_sweep_kernel(idx_ref, coef_ref, blocks_ref, x_ref, acc_ref,
                        nrb: int, slots: int, br: int, bc: int):
     spmv = functools.partial(_spmv_into, idx_ref, blocks_ref,
                              nrb=nrb, slots=slots, br=br, bc=bc)
+    # iterates (and x) may live in bf16 scratch; the accumulator output is
+    # always the wide dtype, so every AXPY widens its term explicitly —
+    # mixed precision by convert_element_type, never implicit promotion
+    out_dt = acc_ref.dtype
     x = x_ref[...]                                       # (B, n)
     # order 0: acc = (c_0 / 2) x                         (Algorithm 1 line 4)
-    acc_ref[...] = 0.5 * coef_ref[0][None, :, None] * x[:, None, :]
+    acc_ref[...] = (0.5 * coef_ref[0][None, :, None]
+                    * x.astype(out_dt)[:, None, :])
     # order 1: t_1 = (P x) / alpha - x                   (line 5)
     spmv(x_ref, pt_ref)
     t1 = pt_ref[...] / alpha - x
     t0_ref[...] = x
     t1_ref[...] = t1
-    acc_ref[...] = acc_ref[...] + coef_ref[1][None, :, None] * t1[:, None, :]
+    acc_ref[...] = acc_ref[...] + (coef_ref[1][None, :, None]
+                                   * t1.astype(out_dt)[:, None, :])
 
     def order_body(k, _):
         # t_k = (2/alpha) P t_{k-1} - 2 t_{k-1} - t_{k-2}     (line 9)
         spmv(t1_ref, pt_ref)
         tk = ((2.0 / alpha) * pt_ref[...] - 2.0 * t1_ref[...] - t0_ref[...])
         ck = pl.load(coef_ref, (pl.ds(k, 1), slice(None)))[0]     # (eta,)
-        acc_ref[...] = acc_ref[...] + ck[None, :, None] * tk[:, None, :]
+        acc_ref[...] = acc_ref[...] + (ck[None, :, None]
+                                       * tk.astype(out_dt)[:, None, :])
         t0_ref[...] = t1_ref[...]
         t1_ref[...] = tk
         return 0
@@ -100,7 +116,8 @@ def _cheb_sweep_kernel(idx_ref, coef_ref, blocks_ref, x_ref, acc_ref,
     jax.lax.fori_loop(2, K + 1, order_body, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("alpha", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "interpret", "scratch_dtype"))
 def cheb_sweep(
     blocks: Array,
     indices: Array,
@@ -109,6 +126,7 @@ def cheb_sweep(
     *,
     alpha: float,
     interpret: bool = False,
+    scratch_dtype: str = "f32",
 ) -> Array:
     """Full K-order shifted-Chebyshev recurrence in one kernel launch.
 
@@ -120,13 +138,24 @@ def cheb_sweep(
     (`ops.fused_cheb_apply`), whose `cheb_step` docs and the
     ``docs/ARCHITECTURE.md`` "Perf accounting" section give the HBM
     round-trip model this kernel collapses.
+
+    scratch_dtype: "f32" (default) or "bf16" — the mixed-precision mode
+    of :data:`SCRATCH_DTYPES`: iterates, SpMV product, the x operand and
+    the Block-ELL blocks are cast to bfloat16, the coefficient table and
+    the (B, eta, n) accumulator output stay at x's dtype with f32 MXU
+    accumulation (`preferred_element_type`).
     """
+    if scratch_dtype not in SCRATCH_DTYPES:
+        raise ValueError(f"scratch_dtype must be one of "
+                         f"{tuple(SCRATCH_DTYPES)}, got {scratch_dtype!r}")
+    sdt = SCRATCH_DTYPES[scratch_dtype]
     nrb, slots, br, bc = blocks.shape
     n = x.shape[-1]
     eta, K1 = coeffs.shape
     batch_shape = x.shape[:-1]
     B = x.size // n
-    x2 = x.reshape(B, n)
+    x2 = x.reshape(B, n).astype(sdt)
+    blocks_k = blocks.astype(sdt)
     coefsT = jnp.asarray(coeffs, x.dtype).T              # (K+1, eta)
 
     kernel = functools.partial(
@@ -142,9 +171,9 @@ def cheb_sweep(
         ],
         out_specs=pl.BlockSpec((B, eta, n), lambda g, idx: (0, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((B, n), jnp.float32),             # t_{k-1}
-            pltpu.VMEM((B, n), jnp.float32),             # t_{k-2}
-            pltpu.VMEM((B, n), jnp.float32),             # P t_{k-1}
+            pltpu.VMEM((B, n), sdt),                     # t_{k-1}
+            pltpu.VMEM((B, n), sdt),                     # t_{k-2}
+            pltpu.VMEM((B, n), sdt),                     # P t_{k-1}
         ],
     )
     acc = pl.pallas_call(
@@ -152,7 +181,7 @@ def cheb_sweep(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, eta, n), x.dtype),
         interpret=interpret,
-    )(indices, coefsT, blocks, x2)
+    )(indices, coefsT, blocks_k, x2)
     return acc.reshape(batch_shape + (eta, n))
 
 
@@ -162,29 +191,34 @@ def _jacobi_sweep_kernel(idx_ref, ws_ref, blocks_ref, b_ref, invd_ref,
                          nrb: int, slots: int, br: int, bc: int):
     spmv = functools.partial(_spmv_into, idx_ref, blocks_ref,
                              nrb=nrb, slots=slots, br=br, bc=bc)
+    # xp / q / h may live in bf16 scratch; the x iterate (the output ref)
+    # and the b / D^{-1} operands stay wide, with explicit casts at every
+    # scratch boundary so the update itself runs at full precision
     x_ref[...] = x0_ref[...]
-    xp_ref[...] = x0_ref[...]
+    xp_ref[...] = x0_ref[...].astype(xp_ref.dtype)
 
     def round_body(t, _):
         x = x_ref[...]
         # den(P) x by Horner: deg(den) in-kernel SpMVs, coefficients baked
         # in as compile-time constants (the rational spec is host-known)
-        h_ref[...] = den[-1] * x
+        h_ref[...] = (den[-1] * x).astype(h_ref.dtype)
         for c in den[-2::-1]:
             spmv(h_ref, q_ref)
-            h_ref[...] = q_ref[...] + c * x
+            h_ref[...] = q_ref[...] + (c * x).astype(h_ref.dtype)
         wt = pl.load(ws_ref, (pl.ds(t, 1), slice(None)))[0]       # (2,)
         # x_next = w (x + D^{-1}(b - den(P) x)) - s x_prev   (Eq. (24)/(25))
-        x_next = (wt[0] * (x + invd_ref[...] * (b_ref[...] - h_ref[...]))
-                  - wt[1] * xp_ref[...])
-        xp_ref[...] = x
+        x_next = (wt[0] * (x + invd_ref[...]
+                           * (b_ref[...] - h_ref[...].astype(x.dtype)))
+                  - wt[1] * xp_ref[...].astype(x.dtype))
+        xp_ref[...] = x.astype(xp_ref.dtype)
         x_ref[...] = x_next
         return 0
 
     jax.lax.fori_loop(0, n_iters, round_body, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("den", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("den", "interpret", "scratch_dtype"))
 def jacobi_sweep(
     blocks: Array,
     indices: Array,
@@ -195,6 +229,7 @@ def jacobi_sweep(
     *,
     den: Tuple[float, ...],
     interpret: bool = False,
+    scratch_dtype: str = "f32",
 ) -> Array:
     """Whole (accelerated-)Jacobi solve of den(P) x = b in one launch.
 
@@ -205,7 +240,16 @@ def jacobi_sweep(
     `core.jacobi.cheb_jacobi_weights` for Eq. (25).  den: monomial
     coefficients of the split polynomial, low-degree-first (static).
     Returns x after n_iters rounds, shape (..., n).
+
+    scratch_dtype: "f32" or "bf16" (:data:`SCRATCH_DTYPES`) — under bf16
+    the x_prev / SpMV-product / Horner scratch and the streamed blocks
+    halve, while the x iterate, b, D^{-1} and the Eq. (24)/(25) update
+    stay at b's dtype.
     """
+    if scratch_dtype not in SCRATCH_DTYPES:
+        raise ValueError(f"scratch_dtype must be one of "
+                         f"{tuple(SCRATCH_DTYPES)}, got {scratch_dtype!r}")
+    sdt = SCRATCH_DTYPES[scratch_dtype]
     nrb, slots, br, bc = blocks.shape
     n = b.shape[-1]
     batch_shape = jnp.broadcast_shapes(b.shape, x0.shape)[:-1]
@@ -235,9 +279,9 @@ def jacobi_sweep(
         ],
         out_specs=pl.BlockSpec((B, n), lambda g, idx: (0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((B, n), jnp.float32),             # x_prev
-            pltpu.VMEM((B, n), jnp.float32),             # SpMV product
-            pltpu.VMEM((B, n), jnp.float32),             # Horner accumulator
+            pltpu.VMEM((B, n), sdt),                     # x_prev
+            pltpu.VMEM((B, n), sdt),                     # SpMV product
+            pltpu.VMEM((B, n), sdt),                     # Horner accumulator
         ],
     )
     out = pl.pallas_call(
@@ -245,5 +289,5 @@ def jacobi_sweep(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, n), b2.dtype),
         interpret=interpret,
-    )(indices, ws, blocks, b2, invd2, x02)
+    )(indices, ws, blocks.astype(sdt), b2, invd2, x02)
     return out.reshape(full)

@@ -86,21 +86,35 @@ def spmv(A: BlockELL, x: Array, use_pallas: Optional[bool] = None) -> Array:
     return ref.block_ell_spmv_ref(A.blocks, A.indices, x)
 
 
+def _scratch_itemsize(scratch_dtype: Optional[str], itemsize: int) -> int:
+    """Bytes per element of the sweep scratch/operand buffers: 2 under the
+    bf16 mixed-precision mode, the wide `itemsize` otherwise."""
+    if scratch_dtype is not None and scratch_dtype not in ("f32", "bf16"):
+        raise ValueError(f"scratch_dtype must be 'f32' or 'bf16', "
+                         f"got {scratch_dtype!r}")
+    return 2 if scratch_dtype == "bf16" else itemsize
+
+
 def cheb_sweep_vmem_bytes(A: BlockELL, n: int, eta: int, K: int,
-                          batch: int = 1, itemsize: int = 4) -> int:
+                          batch: int = 1, itemsize: int = 4,
+                          scratch_dtype: Optional[str] = None) -> int:
     """VMEM footprint model for one `cheb_sweep` launch.
 
-    Everything the persistent sweep pins on-chip at once: the three
-    iterates (t_{k-1}, t_{k-2}, P t_{k-1}), the (eta, n) accumulator and
-    the x operand — the ``(3 + eta) * B * n * 4B`` term (+ one more B*n
-    for x) — plus the streamed Block-ELL structure and the (K+1, eta)
-    coefficient table.  `ops.fused_cheb_sweep` compares this against its
-    budget (default :data:`DEFAULT_SWEEP_VMEM_BUDGET`) and falls back to
-    the per-order path when it does not fit.
+    Everything the persistent sweep pins on-chip at once, recomputed from
+    the *actual* buffer dtypes: the three iterates (t_{k-1}, t_{k-2},
+    P t_{k-1}), the x operand and the streamed Block-ELL blocks at the
+    scratch width (2 B under ``scratch_dtype="bf16"``, else `itemsize`);
+    the (B, eta, n) accumulator output, the (K+1, eta) coefficient table
+    at the wide `itemsize`; int32 column indices.  At f32 this is the
+    original ``(3 + eta) * B * n * 4B`` (+ B*n for x) model; under bf16
+    the guarded footprint roughly halves, so `ops.fused_cheb_sweep`'s
+    budget comparison admits ~2x larger (B, n, eta) tiles on the
+    single-launch path.
     """
-    iterates = (3 + eta) * batch * n * itemsize
-    operand = batch * n * itemsize
-    structure = (int(np.prod(A.blocks.shape)) * itemsize
+    sb = _scratch_itemsize(scratch_dtype, itemsize)
+    iterates = 3 * batch * n * sb + eta * batch * n * itemsize
+    operand = batch * n * sb
+    structure = (int(np.prod(A.blocks.shape)) * sb
                  + int(np.prod(A.indices.shape)) * 4)
     table = (K + 1) * eta * itemsize
     return iterates + operand + structure + table
@@ -123,6 +137,7 @@ def fused_cheb_sweep(
     lmax: float,
     use_pallas: Optional[bool] = None,
     vmem_budget: Optional[int] = None,
+    scratch_dtype: Optional[str] = None,
 ) -> Array:
     """Phi_tilde x with the single-launch persistent sweep.
 
@@ -134,8 +149,13 @@ def fused_cheb_sweep(
     :data:`DEFAULT_SWEEP_VMEM_BUDGET`) — oversized problems fall back to
     the per-order `cheb_step` path (logged at INFO).  The reference path
     runs `ref.cheb_sweep_ref`, the same recurrence as one unrolled trace.
+
+    scratch_dtype: None/"f32" or "bf16" — the mixed-precision kernel mode
+    (`cheb_sweep.SCRATCH_DTYPES`); the footprint guard recomputes from
+    the actual scratch width, so bf16 admits ~2x larger tiles.
     """
     use, interp = _resolve(use_pallas)
+    sdt = scratch_dtype or "f32"
     c = jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype))
     eta, K1 = c.shape
     K = K1 - 1
@@ -145,7 +165,7 @@ def fused_cheb_sweep(
             else int(vmem_budget)
         n = x.shape[-1]
         batch = max(1, x.size // n)
-        need = cheb_sweep_vmem_bytes(A, n, eta, K, batch)
+        need = cheb_sweep_vmem_bytes(A, n, eta, K, batch, scratch_dtype=sdt)
         if K < 2:
             return _per_order_cheb(A, x, c, lmax, use_pallas)
         if need > budget:
@@ -155,7 +175,7 @@ def fused_cheb_sweep(
                 "per-order cheb_step path", need, budget, n, eta, K, batch)
             return _per_order_cheb(A, x, c, lmax, use_pallas)
         return cheb_sweep(A.blocks, A.indices, x, c, alpha=alpha,
-                          interpret=interp)
+                          interpret=interp, scratch_dtype=sdt)
     return ref.cheb_sweep_ref(A.blocks, A.indices, x, c, alpha=alpha)
 
 
@@ -181,7 +201,8 @@ def fused_cheb_recurrence(
     VMEM-guarded with a per-order fallback.  The `pallas` backend tags its
     matvec always; `pallas_halo` only on a 1-shard mesh, where the halo
     exchange is a no-op.  An optional ``mv.vmem_budget`` overrides the
-    sweep budget.
+    sweep budget, and an optional ``mv.sweep_dtype`` ("bf16") selects the
+    mixed-precision scratch mode of `cheb_sweep`.
 
     x: (..., n) — any n; `cheb_step` pads its tiles to the 128 lane width
     internally, and leading batch dims take the batched tile paths (one
@@ -195,7 +216,8 @@ def fused_cheb_recurrence(
         out = fused_cheb_sweep(
             A_local, pad_trailing(x, A_local.padded_n), coeffs, lmax,
             use_pallas=use_pallas,
-            vmem_budget=getattr(matvec, "vmem_budget", None))
+            vmem_budget=getattr(matvec, "vmem_budget", None),
+            scratch_dtype=getattr(matvec, "sweep_dtype", None))
         return out[..., :n_logical]
     return _cheb_recurrence_loop(matvec, x, coeffs, lmax, use_pallas)
 
@@ -207,8 +229,16 @@ def _cheb_recurrence_loop(
     lmax: float,
     use_pallas: Optional[bool] = None,
 ) -> Array:
-    """The per-order recurrence loop (one matvec + one fused step/order)."""
+    """The per-order recurrence loop (one matvec + one fused step/order).
+
+    Supports the dual-signature stateful-matvec protocol of
+    `core.chebyshev._stateful_matvec` (the int8 error-feedback halo
+    exchange): a matvec exposing ``init_state(x)`` threads its state
+    through the scan carry; plain matvecs get an empty-state shim.
+    """
     use, interp = _resolve(use_pallas)
+    from ..core.chebyshev import _stateful_matvec
+
     c = jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype))
     K = c.shape[1] - 1
     alpha = float(lmax) / 2.0
@@ -217,22 +247,24 @@ def _cheb_recurrence_loop(
     acc = 0.5 * c[:, 0:1] * x[..., None, :]
     if K == 0:
         return acc
-    t1 = matvec(x) / alpha - x
+    mv2, st = _stateful_matvec(matvec, x)
+    px, st = mv2(x, st)
+    t1 = px / alpha - x
     acc = acc + c[:, 1:2] * t1[..., None, :]
     if K == 1:
         return acc
 
     def body(carry, ck):
-        t_km1, t_km2, acc = carry
-        pt = matvec(t_km1)
+        t_km1, t_km2, acc, st = carry
+        pt, st = mv2(t_km1, st)
         if use:
             tk, acc = cheb_step(pt, t_km1, t_km2, acc, ck,
                                 alpha=alpha, interpret=interp)
         else:
             tk, acc = ref.cheb_step_ref(pt, t_km1, t_km2, acc, ck, alpha=alpha)
-        return (tk, t_km1, acc), None
+        return (tk, t_km1, acc, st), None
 
-    (_, _, acc), _ = jax.lax.scan(body, (t1, t0, acc), c[:, 2:].T)
+    (_, _, acc, _), _ = jax.lax.scan(body, (t1, t0, acc, st), c[:, 2:].T)
     return acc
 
 
@@ -245,6 +277,7 @@ def fused_cheb_apply(
     *,
     sweep: Optional[bool] = None,
     vmem_budget: Optional[int] = None,
+    scratch_dtype: Optional[str] = None,
 ) -> Array:
     """Phi_tilde x with the SpMV + fused-step kernels (Algorithm 1 on TPU).
 
@@ -257,10 +290,14 @@ def fused_cheb_apply(
     :func:`fused_cheb_sweep` (which itself guards on the VMEM budget and
     falls back to the per-order path); False forces the per-order
     SpMV + `cheb_step` loop — the benchmark baseline.
+    scratch_dtype: the sweep path's mixed-precision mode ("bf16" halves
+    the iterate/operand/structure VMEM, f32 accumulator) — ignored on
+    the per-order path.
     """
     if sweep is None or sweep:
         return fused_cheb_sweep(A, x, coeffs, lmax, use_pallas=use_pallas,
-                                vmem_budget=vmem_budget)
+                                vmem_budget=vmem_budget,
+                                scratch_dtype=scratch_dtype)
     return _per_order_cheb(
         A, x, jnp.atleast_2d(jnp.asarray(coeffs, dtype=x.dtype)), lmax,
         use_pallas)
@@ -317,12 +354,17 @@ def jacobi_update(
 
 
 def jacobi_sweep_vmem_bytes(A: BlockELL, n: int, batch: int = 1,
-                            itemsize: int = 4) -> int:
-    """VMEM footprint model for one `jacobi_sweep` launch: x, x_prev, the
-    SpMV product, the Horner accumulator, b and D^{-1} (six pinned (B, n)
-    buffers) plus the streamed Block-ELL structure."""
-    buffers = 6 * batch * n * itemsize
-    structure = (int(np.prod(A.blocks.shape)) * itemsize
+                            itemsize: int = 4,
+                            scratch_dtype: Optional[str] = None) -> int:
+    """VMEM footprint model for one `jacobi_sweep` launch, from the actual
+    buffer dtypes: x_prev, the SpMV product and the Horner accumulator at
+    the scratch width (2 B under ``scratch_dtype="bf16"``), the x iterate,
+    b and D^{-1} (three wide (B, n) buffers) plus the streamed Block-ELL
+    structure at the scratch width.  At f32 this is the original
+    six-buffer model."""
+    sb = _scratch_itemsize(scratch_dtype, itemsize)
+    buffers = 3 * batch * n * sb + 3 * batch * n * itemsize
+    structure = (int(np.prod(A.blocks.shape)) * sb
                  + int(np.prod(A.indices.shape)) * 4)
     return buffers + structure
 
@@ -337,6 +379,7 @@ def fused_jacobi_sweep(
     x0: Optional[Array] = None,
     use_pallas: Optional[bool] = None,
     vmem_budget: Optional[int] = None,
+    scratch_dtype: Optional[str] = None,
 ) -> Array:
     """Whole (accelerated-)Jacobi solve of den(P) x = b, one launch.
 
@@ -349,9 +392,12 @@ def fused_jacobi_sweep(
     host-side (w_t, s_t) schedule (`core.jacobi.jacobi_weights` /
     `cheb_jacobi_weights`).  The same VMEM-budget guard and per-order
     fallback (one `jacobi_step` launch per round, logged at INFO) as the
-    Chebyshev sweep apply.
+    Chebyshev sweep apply.  ``scratch_dtype="bf16"`` selects the
+    mixed-precision kernel mode (the guard recomputes from the actual
+    scratch width).
     """
     use, interp = _resolve(use_pallas)
+    sdt = scratch_dtype or "f32"
     n_logical = b.shape[-1]
     total = A.padded_n
     bp = pad_trailing(jnp.asarray(b), total)
@@ -365,7 +411,7 @@ def fused_jacobi_sweep(
         budget = DEFAULT_SWEEP_VMEM_BUDGET if vmem_budget is None \
             else int(vmem_budget)
         batch = max(1, bp.size // total)
-        need = jacobi_sweep_vmem_bytes(A, total, batch)
+        need = jacobi_sweep_vmem_bytes(A, total, batch, scratch_dtype=sdt)
         if need > budget:
             logger.info(
                 "jacobi_sweep: VMEM footprint %d B exceeds budget %d B "
@@ -373,7 +419,7 @@ def fused_jacobi_sweep(
                 "path", need, budget, total, batch)
         else:
             out = jacobi_sweep(A.blocks, A.indices, bp, invdp, ws, x0p,
-                               den=den, interpret=interp)
+                               den=den, interpret=interp, scratch_dtype=sdt)
             return out[..., :n_logical]
         # per-round fallback: one SpMV chain + one fused update per round
 

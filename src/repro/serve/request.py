@@ -42,6 +42,10 @@ class CompatKey:
     method: Optional[str] = None
     order: int = 0
     tau: Optional[float] = None
+    #: Halo-exchange wire precision of the plan ("f32" | "bf16" | "int8").
+    #: Mixed-precision requests must never coalesce with f32 ones — they
+    #: trace to different programs AND answer with different accuracy.
+    exchange: str = "f32"
     extra: Tuple[Tuple[str, Any], ...] = ()
 
     def label(self) -> str:
@@ -50,6 +54,8 @@ class CompatKey:
         if self.method:
             parts.append(self.method)
         parts.append(f"order={self.order}")
+        if self.exchange != "f32":
+            parts.append(f"exchange={self.exchange}")
         if self.tau is not None:
             parts.append(f"tau={self.tau}")
         parts += [f"{k}={v}" for k, v in self.extra]
@@ -72,7 +78,8 @@ def compat_key(op_name: str, plan, kind: str, method: Optional[str],
             raise ValueError(
                 f"kind {kind!r} takes no method/solver kwargs "
                 f"(got method={method!r}, kwargs={sorted(kwargs)})")
-        return CompatKey(op=op_name, kind=kind, order=int(plan.K))
+        return CompatKey(op=op_name, kind=kind, order=int(plan.K),
+                         exchange=plan.info.get("exchange_dtype", "f32"))
     if method is None:
         raise ValueError("kind='solve' requires method=")
     if kwargs.get("history"):
@@ -86,7 +93,8 @@ def compat_key(op_name: str, plan, kind: str, method: Optional[str],
     extra = canonical_solve_items(
         {k: v for k, v in kwargs.items() if k not in ("n_iters", "tau")})
     return CompatKey(op=op_name, kind=kind, method=method, order=order,
-                     tau=tau, extra=extra)
+                     tau=tau, extra=extra,
+                     exchange=plan.info.get("exchange_dtype", "f32"))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -206,6 +206,45 @@ def test_mixed_float_width_flagged():
     assert "JX-DTYPE-PROMOTION" in _rules(fs)
 
 
+def test_mixed_ok_carveout_sanctions_bf16_sweep(block_ell):
+    """JX-DTYPE-MIXED-OK: the bf16-scratch sweep kernel mixes widths by
+    design (f32 coef table + bf16 blocks/iterates).  The raw trace flags
+    it; the default carve-out — DTYPE_MIXED_OK rule metadata, NOT an
+    allowlist entry — silences exactly those sanctioned-site findings."""
+    from repro.kernels import ops
+    from repro.kernels.cheb_sweep import cheb_sweep
+    A_ell, lmax = block_ell
+    c = jnp.ones((2, 6), jnp.float32)
+
+    def fn(x):
+        x2 = ops.pad_trailing(x, A_ell.padded_n)
+        return cheb_sweep(A_ell.blocks, A_ell.indices, x2, c,
+                          alpha=lmax / 2, interpret=True,
+                          scratch_dtype="bf16")
+
+    x = jax.ShapeDtypeStruct((64,), np.float32)
+    raw = A.check_dtype_discipline(fn, x, mixed_ok=False)
+    assert "JX-DTYPE-PROMOTION" in _rules(raw)
+    assert all("repro/kernels/cheb_sweep.py" in f.path for f in raw)
+    assert A.check_dtype_discipline(fn, x) == []
+    # the carve-out is documented metadata, not a bare path list
+    assert all(why for _frag, why in A.DTYPE_MIXED_OK)
+
+
+def test_mixed_ok_carveout_does_not_shadow_accidents():
+    """An accidental f32/bf16 mix OUTSIDE a sanctioned path still fires
+    with the carve-out active (default mixed_ok=True)."""
+    def bad(x):
+        def body(c, w):
+            return c + w.astype(jnp.float32), None
+        out, _ = jax.lax.scan(body, x, jnp.zeros((3,), jnp.bfloat16))
+        return out
+
+    fs = A.check_dtype_discipline(bad, jax.ShapeDtypeStruct((8,),
+                                                            np.float32))
+    assert "JX-DTYPE-PROMOTION" in _rules(fs)
+
+
 def test_complex_arma_solve_is_exempt():
     """ARMA mixes complex64 poles with f32 signals by design — the dtype
     rules must stay quiet on it."""

@@ -115,6 +115,21 @@ assert st_halo.exchange_rounds == K
 assert st_halo.total_bytes == 2 * K * S * 1 * 4 \
     == halo_plan.info["halo_bytes_per_apply"]
 
+# compressed exchange: the wire-byte models per dtype are
+#   f32: 4h  |  bf16: 2h  |  int8: h + 4 (f32 scale bitcast-packed)
+# per boundary row per direction.  Rounds must stay exactly K — the
+# codec rides the SAME two ppermutes, compression never adds a round.
+# (At h=1 the int8 row is 5 B > 4 B f32: the packed scale dominates —
+# the ratio gates live in test_exchange_dtype.py at realistic h.)
+for dt, row_bytes in (("bf16", 2), ("int8", 5)):
+    for backend in ("halo", "pallas_halo"):
+        p = op.plan(backend, mesh=mesh, exchange_dtype=dt)
+        s = plan_comm_stats(p)["apply"]
+        assert s.exchange_rounds == K, (backend, dt)
+        assert s.total_bytes == 2 * K * S * 1 * row_bytes \
+            == p.info["halo_bytes_per_apply"], (backend, dt, s.total_bytes)
+        assert s.bytes_per_round == 2 * 1 * row_bytes, (backend, dt)
+
 print("COMMSTATS OK")
 """
 

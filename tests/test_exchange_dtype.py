@@ -1,0 +1,200 @@
+"""Compressed halo exchange (repro.dist.quantize): wire-byte models,
+error-feedback accuracy, and the measured bytes-per-round ratios on a
+realistically wide halo (h = 24), for both sharded backends.
+
+The path-graph closed forms live in test_commstats.py; this file uses a
+banded Laplacian with coupling bandwidth 24 because the int8 wire row is
+``h + 4`` bytes (the f32 scale is bitcast-packed into the payload) — at
+h = 1 the scale dominates and int8 is *larger* than f32; the advertised
+<= 0.3x ratio only means anything at realistic halo widths.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _subproc import run_payload
+from repro.dist import quantize
+
+
+# ---------------------------------------------------------------------------
+# Codec unit tests (single device)
+# ---------------------------------------------------------------------------
+def test_validate_exchange_dtype():
+    for dt in quantize.EXCHANGE_DTYPES:
+        quantize.validate_exchange_dtype(dt)
+    with pytest.raises(ValueError):
+        quantize.validate_exchange_dtype("f16")
+    with pytest.raises(ValueError):
+        quantize.validate_exchange_dtype("int4")
+
+
+def test_tile_wire_bytes_models():
+    for h in (1, 8, 24, 128):
+        assert quantize.tile_wire_bytes(h, "f32") == 4 * h
+        assert quantize.tile_wire_bytes(h, "bf16") == 2 * h
+        assert quantize.tile_wire_bytes(h, "int8") == h + 4
+
+
+def test_codec_roundtrip_and_wire_sizes():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((6, 24)).astype(np.float32))
+    # f32: identity
+    assert quantize.encode(x, "f32") is x
+    # bf16: real bf16 on the wire, half the bytes, ~3 significand digits
+    w16 = quantize.encode(x, "bf16")
+    assert w16.dtype == jnp.bfloat16 and w16.nbytes == x.nbytes // 2
+    assert float(jnp.abs(quantize.decode(w16, "bf16") - x).max()) < 2e-2
+    # int8: one (h+4)-byte int8 row per tile row — scale packed, no side
+    # channel (a separate scale ppermute would double the round count)
+    w8 = quantize.encode(x, "int8")
+    assert w8.dtype == jnp.int8 and w8.shape == (6, 28)
+    back = quantize.decode(w8, "int8")
+    scale = jnp.abs(x).max(axis=-1, keepdims=True)
+    assert float((jnp.abs(back - x) / scale).max()) <= 0.5 / 127 + 1e-6
+
+
+def test_codec_all_zero_rows_pass_through():
+    z = jnp.zeros((3, 16), jnp.float32)
+    for dt in ("bf16", "int8"):
+        assert float(jnp.abs(quantize.decode(quantize.encode(z, dt),
+                                             dt)).max()) == 0.0
+
+
+def test_error_feedback_beats_plain_requantization():
+    """Accumulating the quantization residual keeps repeated int8
+    round-trips from drifting: the EF error after many rounds stays near
+    one round's noise floor while plain requantization random-walks."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((4, 24)).astype(np.float32))
+    acc_plain = jnp.zeros_like(x)
+    acc_ef = jnp.zeros_like(x)
+    r = quantize.ef_init(x)
+    rounds = 40
+    for _ in range(rounds):
+        acc_plain = acc_plain + quantize.decode(quantize.encode(x, "int8"),
+                                                "int8")
+        wire, r = quantize.ef_encode(x, r, "int8")
+        acc_ef = acc_ef + quantize.decode(wire, "int8")
+    target = x * rounds
+    err_plain = float(jnp.abs(acc_plain - target).max())
+    err_ef = float(jnp.abs(acc_ef - target).max())
+    assert err_ef < err_plain / 4, (err_ef, err_plain)
+
+
+# ---------------------------------------------------------------------------
+# Sharded accuracy + comm gates (8 devices, h = 24)
+# ---------------------------------------------------------------------------
+PAYLOAD = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.dist.operator import GraphOperator
+from repro.dist.commstats import plan_comm_stats
+
+rng = np.random.default_rng(0)
+n, S, K, bw = 512, 8, 20, 24
+B = np.zeros((n, n), dtype=np.float32)
+for i in range(n):
+    lo, hi = max(0, i - bw), min(n, i + bw + 1)
+    B[i, lo:hi] = rng.standard_normal(hi - lo) * 0.1
+B = np.abs(B + B.T) / 2
+L = np.diag(B.sum(1)) - B          # banded Laplacian, bandwidth 24
+lmax = float(2 * B.sum(1).max())
+op = GraphOperator(P=jnp.asarray(L),
+                   multipliers=[lambda lam: jnp.exp(-lam)],
+                   lmax=lmax, K=K)
+mesh = jax.make_mesh((S,), ("graph",))
+x = jnp.asarray(rng.standard_normal((4, n)).astype(np.float32))
+ref = op.plan("dense").apply(x)
+refmax = float(jnp.abs(ref).max())
+
+for backend in ("halo", "pallas_halo"):
+    base = plan_comm_stats(op.plan(backend, mesh=mesh))["apply"]
+    errs = {}
+    for dt in ("f32", "bf16", "int8"):
+        plan = op.plan(backend, mesh=mesh, exchange_dtype=dt)
+        assert plan.info["exchange_dtype"] == dt
+        st = plan_comm_stats(plan)["apply"]
+        stb = plan_comm_stats(plan, batch=16)["apply"]
+        # rounds: exactly K (the paper's 2K|E| bound), batch-invariant —
+        # compression rides the SAME two ppermutes per order
+        assert st.exchange_rounds == K, (backend, dt, st.exchange_rounds)
+        assert stb.exchange_rounds == K, (backend, dt, stb.exchange_rounds)
+        # bytes-per-round ratios at h = 24
+        ratio = st.bytes_per_round / base.bytes_per_round
+        if dt == "f32":
+            assert ratio == 1.0, (backend, ratio)
+        elif dt == "bf16":
+            assert ratio <= 0.5, (backend, ratio)
+        else:
+            assert ratio <= 0.3, (backend, ratio)   # (24+4)/96 ~ 0.29
+        y = plan.apply(x)
+        errs[dt] = float(jnp.abs(y - ref).max()) / refmax
+    assert errs["f32"] < 1e-5, (backend, errs)
+    assert errs["bf16"] < 5e-3, (backend, errs)
+    # int8 + error feedback lands within 10x of bf16 at K = 20
+    assert errs["int8"] <= 10 * errs["bf16"], (backend, errs)
+    print(backend, "errs", errs)
+
+# Error feedback vs plain int8, in the regime EF is designed for: repeated
+# transmission of persistent boundary tiles (streaming re-sends; a solve
+# iterating at its fixed point).  Re-sending the SAME tiles, plain int8
+# injects the SAME deterministic rounding error every round — the
+# accumulated output drifts linearly — while the EF residual telescopes
+# the accumulated error back to one round's noise floor.  (On the
+# *oscillating* Chebyshev iterates of a single apply the propagation
+# weights vary too fast to telescope and EF is neutral: see
+# ARCHITECTURE.md "Error feedback".)
+from repro.core.chebyshev import _stateful_matvec
+R = 20
+exact = jnp.einsum("ij,...j->...i", jnp.asarray(L), x) * R
+emax = float(jnp.abs(exact).max())
+acc_errs = {}
+for label, ef in (("ef", True), ("plain", False)):
+    plan = op.plan("halo", mesh=mesh, exchange_dtype="int8",
+                   error_feedback=ef)
+
+    def fn(mv, xl):
+        mv2, st = _stateful_matvec(mv, xl)
+
+        def body(carry, _):
+            acc, st = carry
+            h, st = mv2(xl, st)
+            return (acc + h, st), None
+
+        (acc, _), _ = jax.lax.scan(body, (jnp.zeros_like(xl), st),
+                                   None, length=R)
+        return acc
+
+    out = plan.matvec_runner(fn, (x,))
+    acc_errs[label] = float(jnp.abs(out - exact).max()) / emax
+print("streaming acc errs", acc_errs)
+assert acc_errs["ef"] < acc_errs["plain"] / 4, acc_errs
+
+# loose end-to-end solver gate: a bf16-exchange jacobi solve still solves
+plan16 = op.plan("halo", mesh=mesh, exchange_dtype="bf16")
+y = ref[:, 0, :]
+x32 = op.plan("dense").solve(y, "jacobi", tau=0.5, n_iters=15).x
+x16 = plan16.solve(y, "jacobi", tau=0.5, n_iters=15).x
+rel = float(jnp.abs(x16 - x32).max() / jnp.abs(x32).max())
+assert rel < 5e-2, rel
+print("EXCHANGE DTYPE OK")
+"""
+
+
+def test_exchange_dtypes_8shards():
+    out = run_payload(PAYLOAD, n_devices=8)
+    assert "EXCHANGE DTYPE OK" in out
+
+
+def test_build_rejects_unknown_exchange_dtype():
+    from repro.dist.operator import GraphOperator
+    rng = np.random.default_rng(0)
+    A = np.abs(rng.standard_normal((16, 16)).astype(np.float32))
+    A = (A + A.T) / 2
+    L = np.diag(A.sum(1)) - A
+    op = GraphOperator(P=jnp.asarray(L),
+                       multipliers=[lambda lam: lam],
+                       lmax=float(2 * A.sum(1).max()), K=4)
+    for backend in ("halo", "pallas_halo"):
+        with pytest.raises(ValueError):
+            op.plan(backend, exchange_dtype="f16")

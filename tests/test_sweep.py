@@ -115,6 +115,115 @@ def test_vmem_footprint_model(block_ell_500):
 
 
 # ---------------------------------------------------------------------------
+# Mixed-precision (bf16-scratch) sweep
+# ---------------------------------------------------------------------------
+def test_cheb_sweep_bf16_scratch_matches_ref(block_ell_500):
+    """scratch_dtype='bf16': iterates/blocks/operand in bf16, f32 coef
+    table + f32 accumulator — matches the f32 reference to bf16 tolerance
+    and returns f32 output."""
+    g, A = block_ell_500
+    K, eta = 9, 3
+    coeffs = jnp.asarray(
+        np.random.RandomState(0).randn(eta, K + 1), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, A.padded_n))
+    alpha = g.lambda_max_bound() / 2
+    ref_out = ref.cheb_sweep_ref(A.blocks, A.indices, x, coeffs, alpha=alpha)
+    got = cheb_sweep(A.blocks, A.indices, x, coeffs, alpha=alpha,
+                     interpret=True, scratch_dtype="bf16")
+    assert got.dtype == x.dtype
+    scale = float(jnp.abs(ref_out).max())
+    assert float(jnp.abs(got - ref_out).max()) / scale < 3e-2
+    with pytest.raises(ValueError):
+        cheb_sweep(A.blocks, A.indices, x, coeffs, alpha=alpha,
+                   interpret=True, scratch_dtype="f16")
+
+
+def test_jacobi_sweep_bf16_scratch_matches_ref(block_ell_500):
+    g, A = block_ell_500
+    L = np.asarray(g.laplacian())
+    tau = 0.5
+    den = (tau, 1.0)
+    inv_d = ops.pad_trailing(
+        jnp.asarray(tau / (tau + np.diag(L)), jnp.float32), A.padded_n)
+    b = jax.random.normal(jax.random.PRNGKey(5), (4, A.padded_n))
+    ws = jacobi.jacobi_weights(10)
+    oracle = ref.jacobi_sweep_ref(A.blocks, A.indices, b, inv_d / tau,
+                                  ws, jnp.zeros_like(b), den=den)
+    kern = jacobi_sweep(A.blocks, A.indices, b, inv_d / tau, ws,
+                        jnp.zeros_like(b), den=den, interpret=True,
+                        scratch_dtype="bf16")
+    scale = float(jnp.abs(oracle).max())
+    assert float(jnp.abs(kern - oracle).max()) / scale < 3e-2
+
+
+def test_vmem_footprint_model_bf16_and_measured_ratio(block_ell_500):
+    """bf16 scratch halves the iterate/operand/structure terms (the f32
+    coef table and int32 indices stay) — the model ratio is >= 1.8, and
+    the TRACED pallas_call footprint (analysis.pallas_footprint, recovered
+    from BlockSpecs + scratch avals) shrinks by >= 1.8x too, so the
+    VMEM-guard ceiling genuinely roughly doubles."""
+    from repro import analysis as A_
+    g, A = block_ell_500
+    n, eta, K, B = A.padded_n, 3, 10, 4
+    got16 = ops.cheb_sweep_vmem_bytes(A, n, eta, K, B, scratch_dtype="bf16")
+    iterates = 3 * B * n * 2 + eta * B * n * 4 + B * n * 2  # acc stays f32
+    structure = A.blocks.size * 2 + A.indices.size * 4 + (K + 1) * eta * 4
+    assert got16 == iterates + structure
+    got32 = ops.cheb_sweep_vmem_bytes(A, n, eta, K, B)
+    assert got32 / got16 >= 1.8
+    # jacobi model too
+    j32 = ops.jacobi_sweep_vmem_bytes(A, n, batch=B)
+    j16 = ops.jacobi_sweep_vmem_bytes(A, n, batch=B, scratch_dtype="bf16")
+    assert j32 / j16 >= 1.8
+
+    coeffs = jnp.ones((eta, K + 1), jnp.float32)
+    x = jax.ShapeDtypeStruct((B, n), np.float32)
+
+    def traced_bytes(sdt):
+        def fn(v):
+            return cheb_sweep(A.blocks, A.indices, v, coeffs, alpha=2.0,
+                              interpret=True, scratch_dtype=sdt)
+        closed = jax.make_jaxpr(fn)(x)
+        eqns = [e for e, _ in A_.collect_eqns(closed, {"pallas_call"})]
+        assert len(eqns) == 1
+        return A_.pallas_footprint(eqns[0])["total_bytes"]
+
+    assert traced_bytes("f32") / traced_bytes("bf16") >= 1.8
+
+
+def test_sweep_dtype_tag_survives_with_budget(op120):
+    """`solvers._with_budget` re-tags without dropping the sweep_dtype tag,
+    and the single-shard pallas_halo build stamps it on its matvec."""
+    from repro.dist import solvers as dsolv
+    g, op = op120
+    plan = op.plan("pallas_halo", sweep_dtype="bf16")
+    assert plan.info["sweep_dtype"] == "bf16"
+    assert plan.info["sweep_vmem_bytes"] < op.plan(
+        "pallas_halo").info["sweep_vmem_bytes"]
+
+    # the single-device pallas backend takes the same knob
+    pplan = op.plan("pallas", use_pallas=False, sweep_dtype="bf16")
+    assert pplan.info["sweep_dtype"] == "bf16"
+    tag = pplan.matvec_runner(
+        lambda mv, v: v + (getattr(mv, "sweep_dtype", None) == "bf16"),
+        (jnp.zeros(3),))
+    assert float(tag[0]) == 1.0  # the solve path sees the bf16 tag
+    assert pplan.info["sweep_vmem_bytes"] < op.plan(
+        "pallas", use_pallas=False).info["sweep_vmem_bytes"]
+
+    def mv(v):
+        return v
+
+    mv.block_ell = object()
+    mv.vmem_budget = None
+    mv.sweep_dtype = "bf16"
+    wrapped = dsolv._with_budget(mv, 123456)
+    assert wrapped.vmem_budget == 123456
+    assert wrapped.sweep_dtype == "bf16"
+    assert wrapped.block_ell is mv.block_ell
+
+
+# ---------------------------------------------------------------------------
 # Jacobi sweep
 # ---------------------------------------------------------------------------
 def test_jacobi_sweep_kernel_matches_per_round(block_ell_500):
