@@ -13,27 +13,40 @@
   running inside every backend via the `matvec_runner` primitive.
 * :mod:`repro.dist.gossip`    — Chebyshev ring consensus (the paper's
   Algorithm 1 on the device ring) for fabric-free gradient averaging.
+* :mod:`repro.dist.partition` — pluggable edge-cut partitions for
+  arbitrary sparse graphs (`GeneralPartition`, `partition_general`,
+  `community_graph_csr`): per-shard Block-ELL plus a ring-offset
+  exchange plan consumed by the halo backends via
+  ``plan(..., partition="general")``.
 """
-from . import commstats, gossip, sharding, solvers
+from . import commstats, gossip, partition, sharding, solvers
 from .backends import available_backends, get_backend, register_backend
 from .commstats import (CommStats, plan_comm_stats, solve_comm_stats,
                         verify_message_scaling)
 from .operator import ExecutionPlan, GraphOperator, as_graph_operator
+from .partition import (CSRMatrix, GeneralPartition, OverfullSlotsError,
+                        community_graph_csr, partition_general)
 from .sharding import ShardingRules, make_rules
 from .solvers import SolveResult, solve_plan
 
 __all__ = [
+    "CSRMatrix",
     "CommStats",
     "ExecutionPlan",
+    "GeneralPartition",
     "GraphOperator",
+    "OverfullSlotsError",
     "ShardingRules",
     "SolveResult",
     "as_graph_operator",
     "available_backends",
     "commstats",
+    "community_graph_csr",
     "get_backend",
     "gossip",
     "make_rules",
+    "partition",
+    "partition_general",
     "plan_comm_stats",
     "register_backend",
     "sharding",

@@ -443,14 +443,19 @@ def halo_bytes_per_apply(parts: BandedPartition, K: int, eta: int = 1,
 @register_backend("halo")
 def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
           allow_leak: bool = False, exchange_dtype: str = "f32",
-          error_feedback: bool = True, **options):
+          error_feedback: bool = True, partition_method: str = "bfs",
+          **options):
     """Build an ExecutionPlan running every application inside a shard_map
     over `mesh` with ring halo exchange.
 
-    Requires a dense P (or a precomputed `partition`).  The banded partition
-    must be leak-free (spatially sorted graph) unless ``allow_leak=True`` —
-    otherwise use the 'allgather' backend.  Without `mesh=`, a 1-D "graph"
-    mesh over every visible device is built.
+    Requires a dense P (or a precomputed `partition`).  ``partition=``
+    accepts None / ``"banded"`` (the block-tridiagonal ring plan — the
+    graph must be leak-free under the contiguous split unless
+    ``allow_leak=True``), ``"general"`` (edge-cut sharding of *arbitrary*
+    sparse graphs via `repro.dist.partition.partition_general`, exact for
+    any sparsity; ``partition_method`` picks "bfs" or "spectral"), or a
+    precomputed `BandedPartition` / `GeneralPartition` instance.  Without
+    `mesh=`, a 1-D "graph" mesh over every visible device is built.
 
     ``exchange_dtype`` selects the wire precision of the boundary tiles
     ("f32" | "bf16" | "int8", see `repro.dist.quantize`);
@@ -458,12 +463,23 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
     residual across the K orders.
     """
     from ..operator import ExecutionPlan
+    from ..partition import build_general_plan, resolve_partition_arg
 
     quantize.validate_exchange_dtype(exchange_dtype)
     if mesh is None:
         mesh = jax.make_mesh((len(jax.devices()),), ("graph",))
     axis = axis or mesh.axis_names[0]
     n_shards = int(mesh.shape[axis])
+    general = resolve_partition_arg(op, partition, n_shards,
+                                    method=partition_method)
+    if general is not None:
+        return build_general_plan(op, general, mesh, axis,
+                                  interior="dense",
+                                  exchange_dtype=exchange_dtype,
+                                  error_feedback=error_feedback,
+                                  backend_name="halo")
+    if isinstance(partition, str):
+        partition = None  # "banded": build from op.P below
     leak = 0.0
     if partition is None:
         if callable(op.P):
@@ -545,7 +561,11 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
             "n_shards": n_shards,
             "n_local": nl,
             "halo_width": h,
+            "partition": "banded",
             "partition_leak": leak,
+            # one exchange round = the left+right ppermute pair (commstats
+            # divides the measured ppermute tally by this)
+            "exchange_collectives_per_round": 2,
             "exchange_dtype": exchange_dtype,
             "error_feedback": bool(error_feedback),
             # forward/gram ship an eta-independent (..., h) tile per order;

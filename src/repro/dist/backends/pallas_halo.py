@@ -117,12 +117,16 @@ def partition_block_ell(
     P_dense: np.ndarray,
     n_shards: int,
     block: Tuple[int, int] = (8, 128),
+    max_slots: Optional[int] = None,
 ) -> Tuple[ShardedBlockELL, float]:
     """Split P into per-shard Block-ELL diagonals + boundary couplings.
 
     Returns (partition, leak); `leak` is the Frobenius norm of entries
     outside the block-tridiagonal band (see `halo.partition_banded` — must
-    be ~0 for exactness, use `graph.spatial_sort` first).
+    be ~0 for exactness, use `graph.spatial_sort` first).  ``max_slots``
+    bounds the uniform slot count and *raises*
+    `repro.dist.partition.OverfullSlotsError` when a row block needs more —
+    never truncates (dropped blocks would be silently wrong matvecs).
     """
     banded, leak = partition_banded(np.asarray(P_dense), n_shards)
     diag = np.asarray(banded.diag)
@@ -133,6 +137,14 @@ def partition_block_ell(
 
     cells = [graphmod.to_block_ell(diag[s], block) for s in range(n_shards)]
     slots = max(c.blocks.shape[1] for c in cells)
+    if max_slots is not None and slots > max_slots:
+        from ..partition import OverfullSlotsError
+
+        raise OverfullSlotsError(
+            f"a row block couples {slots} column blocks but the uniform "
+            f"slot budget is {max_slots} — refusing to truncate (silently "
+            "dropped blocks = silently wrong matvecs); raise max_slots or "
+            "shrink the column block")
     blocks, indices, mask = [], [], []
     for c in cells:
         pad = slots - c.blocks.shape[1]
@@ -284,14 +296,19 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
           use_pallas: Optional[bool] = None,
           vmem_budget: Optional[int] = None,
           exchange_dtype: str = "f32", error_feedback: bool = True,
-          sweep_dtype: Optional[str] = None, **options):
+          sweep_dtype: Optional[str] = None,
+          partition_method: str = "bfs", **options):
     """Build an ExecutionPlan running the fused Pallas Chebyshev recurrence
     per shard with boundary-row halo exchange.
 
     Requires a dense, banded P (spatially sorted sensor graph) or a
     precomputed `partition=` (a `ShardedBlockELL`, or a `halo.
-    BandedPartition` which is converted).  Without `mesh=`, a 1-D "graph"
-    mesh over every visible device is built.  `use_pallas` follows the
+    BandedPartition` which is converted).  `partition="general"` (or a
+    `repro.dist.partition.GeneralPartition`) switches to the edge-cut
+    exchange plan for arbitrary sparse graphs — `partition_method`
+    ("bfs" | "spectral") picks the partitioner when the string form is
+    used.  Without `mesh=`, a 1-D "graph" mesh over every visible
+    device is built.  `use_pallas` follows the
     `kernels.ops` dispatch policy (None: native on TPU, jnp oracle on CPU);
     `vmem_budget` overrides the single-launch sweep kernel's VMEM guard
     (`ops.DEFAULT_SWEEP_VMEM_BUDGET`) on 1-shard meshes, where the whole
@@ -307,11 +324,26 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
     """
     from ..operator import ExecutionPlan
 
+    from ..partition import build_general_plan, resolve_partition_arg
+
     quantize.validate_exchange_dtype(exchange_dtype)
     if mesh is None:
         mesh = jax.make_mesh((len(jax.devices()),), ("graph",))
     axis = axis or mesh.axis_names[0]
     n_shards = int(mesh.shape[axis])
+    general = resolve_partition_arg(op, partition, n_shards, block=block,
+                                    method=partition_method)
+    if general is not None:
+        return build_general_plan(op, general, mesh, axis,
+                                  interior="block_ell",
+                                  use_pallas=use_pallas,
+                                  vmem_budget=vmem_budget,
+                                  sweep_dtype=sweep_dtype,
+                                  exchange_dtype=exchange_dtype,
+                                  error_feedback=error_feedback,
+                                  backend_name="pallas_halo")
+    if isinstance(partition, str):
+        partition = None
     leak = 0.0
     if partition is None:
         if callable(op.P):
@@ -357,7 +389,11 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
         "n_local": nl,
         "n_local_padded": pnl,
         "halo_width": h,
+        "partition": "banded",
         "partition_leak": leak,
+        # one exchange round = the left+right ppermute pair (commstats
+        # divides the measured ppermute tally by this)
+        "exchange_collectives_per_round": 2,
         "block": block,
         "nnz_blocks": parts.nnz_blocks,
         "exchange_dtype": exchange_dtype,

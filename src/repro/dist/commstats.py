@@ -52,7 +52,7 @@ from __future__ import annotations
 import dataclasses
 import logging
 import warnings
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -70,13 +70,17 @@ class CollectiveCall:
     """One collective site, aggregated over loop trips.
 
     count: executions per plan application (per shard);
-    elems / nbytes: payload per shard per execution.
+    elems / nbytes: payload per shard per execution;
+    perm: for ppermute, the (src, dst) permutation as a tuple of pairs —
+    distinct perms are distinct exchange directions (`exchange_rounds`
+    groups by it when the plan does not declare its own divisor).
     """
 
     primitive: str
     count: int
     elems: int
     nbytes: int
+    perm: Optional[Tuple] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +97,7 @@ class CommStats:
     collectives: Tuple[CollectiveCall, ...]
     n_shards: int
     batch: int = 1
+    ppermutes_per_round: Optional[int] = None
 
     @property
     def n_collectives(self) -> int:
@@ -103,14 +108,31 @@ class CommStats:
     def exchange_rounds(self) -> int:
         """Neighbour-exchange rounds == matvec applications of P.
 
-        The ring backends issue one ppermute *pair* per matvec (halo /
-        pallas_halo) or one all_gather per matvec (allgather); everything
-        else (psum, ...) is not a recurrence round.
+        The banded ring backends issue one ppermute *pair* per matvec
+        (halo / pallas_halo), a `GeneralPartition` plan issues one
+        ppermute per active ring offset per matvec, and allgather issues
+        one all_gather per matvec; everything else (psum, ...) is not a
+        recurrence round.  Resolution order: the plan-declared divisor
+        (`ppermutes_per_round`, from plan.info's
+        ``exchange_collectives_per_round`` — authoritative, since e.g. at
+        S=2 the two ring directions share one perm and perm-grouping alone
+        would halve the count), then the max per-perm tally (each matvec
+        touches every exchange direction once), then the legacy pair
+        assumption.
         """
         pp = sum(c.count for c in self.collectives
                  if c.primitive == "ppermute")
         ag = sum(c.count for c in self.collectives
                  if c.primitive in ("all_gather", "pgather"))
+        if self.ppermutes_per_round:
+            return pp // self.ppermutes_per_round + ag
+        if pp:
+            by_perm: Dict[Any, int] = {}
+            for c in self.collectives:
+                if c.primitive == "ppermute":
+                    by_perm[c.perm] = by_perm.get(c.perm, 0) + c.count
+            if None not in by_perm:
+                return max(by_perm.values()) + ag
         return pp // 2 + ag
 
     @property
@@ -180,7 +202,8 @@ class UncountableCollectiveError(RuntimeError):
 
 
 def measure(fn: Callable, *example_args, n_shards: int = 1,
-            batch: int = 1, while_loops: str = "error") -> CommStats:
+            batch: int = 1, while_loops: str = "error",
+            ppermutes_per_round: Optional[int] = None) -> CommStats:
     """Trace `fn` on example arguments and tally its collectives.
 
     `example_args` may be concrete arrays or `jax.ShapeDtypeStruct`s —
@@ -195,12 +218,18 @@ def measure(fn: Callable, *example_args, n_shards: int = 1,
     :class:`UncountableCollectiveError`; ``"warn"`` emits a `UserWarning`
     (+ WARNING log) and counts the site once per enclosing-scan trip, so
     the returned stats are an explicit *lower bound*.
+
+    `ppermutes_per_round` forwards a plan-declared
+    ``exchange_collectives_per_round`` to :attr:`CommStats.exchange_rounds`
+    (how many ppermutes one neighbour-exchange round comprises: 2 for the
+    banded ring, the number of active ring offsets for a
+    `GeneralPartition`).
     """
     if while_loops not in ("error", "warn"):
         raise ValueError(
             f"while_loops must be 'error' or 'warn', got {while_loops!r}")
     closed = jax.make_jaxpr(fn)(*example_args)
-    tally: Dict[Tuple[str, int, int], int] = {}
+    tally: Dict[Tuple[str, int, int, Any], int] = {}
 
     def visit(eqn, ctx):
         name = eqn.primitive.name
@@ -217,14 +246,20 @@ def measure(fn: Callable, *example_args, n_shards: int = 1,
                           "bound", stacklevel=3)
             logger.warning("commstats.measure: %s (counting one trip)", msg)
         elems, nbytes = eqn_payload(eqn)
-        tally[(name, elems, nbytes)] = (
-            tally.get((name, elems, nbytes), 0) + ctx.mult)
+        perm = eqn.params.get("perm") if name == "ppermute" else None
+        if perm is not None:
+            perm = tuple(tuple(int(v) for v in p) for p in perm)
+        key = (name, elems, nbytes, perm)
+        tally[key] = tally.get(key, 0) + ctx.mult
 
     walk_jaxpr(closed, visit)
     calls = tuple(
-        CollectiveCall(primitive=k[0], count=v, elems=k[1], nbytes=k[2])
-        for k, v in sorted(tally.items()))
-    return CommStats(collectives=calls, n_shards=n_shards, batch=batch)
+        CollectiveCall(primitive=k[0], count=v, elems=k[1], nbytes=k[2],
+                       perm=k[3])
+        for k, v in sorted(tally.items(),
+                           key=lambda kv: (kv[0][:3], repr(kv[0][3]))))
+    return CommStats(collectives=calls, n_shards=n_shards, batch=batch,
+                     ppermutes_per_round=ppermutes_per_round)
 
 
 def plan_comm_stats(plan, n: int = None, batch: int = None) -> Dict[str, CommStats]:
@@ -243,15 +278,18 @@ def plan_comm_stats(plan, n: int = None, batch: int = None) -> Dict[str, CommSta
             raise ValueError("plan_comm_stats needs n= for a closure P")
         n = int(np.asarray(op.P).shape[0])
     shards = int(plan.info.get("n_shards", 1))
+    ppr = plan.info.get("exchange_collectives_per_round")
     lead = () if batch is None else (int(batch),)
     b = 1 if batch is None else int(batch)
     f = jax.ShapeDtypeStruct(lead + (n,), np.float32)
     a = jax.ShapeDtypeStruct(lead + (op.eta, n), np.float32)
     return {
-        "apply": measure(plan.apply, f, n_shards=shards, batch=b),
+        "apply": measure(plan.apply, f, n_shards=shards, batch=b,
+                         ppermutes_per_round=ppr),
         "apply_adjoint": measure(plan.apply_adjoint, a, n_shards=shards,
-                                 batch=b),
-        "apply_gram": measure(plan.apply_gram, f, n_shards=shards, batch=b),
+                                 batch=b, ppermutes_per_round=ppr),
+        "apply_gram": measure(plan.apply_gram, f, n_shards=shards, batch=b,
+                              ppermutes_per_round=ppr),
     }
 
 
@@ -276,6 +314,7 @@ def solve_comm_stats(plan, method: str = "chebyshev", n: int = None,
             raise ValueError("solve_comm_stats needs n= for a closure P")
         n = int(np.asarray(op.P).shape[0])
     shards = int(plan.info.get("n_shards", 1))
+    ppr = plan.info.get("exchange_collectives_per_round")
     lead = () if batch is None else (int(batch),)
     b = 1 if batch is None else int(batch)
     y = jax.ShapeDtypeStruct(lead + (n,), np.float32)
@@ -283,7 +322,8 @@ def solve_comm_stats(plan, method: str = "chebyshev", n: int = None,
     def run(sig):
         return plan.solve(sig, method, **solve_kwargs).x
 
-    return measure(run, y, n_shards=shards, batch=b)
+    return measure(run, y, n_shards=shards, batch=b,
+                   ppermutes_per_round=ppr)
 
 
 def verify_message_scaling(plan, n_edges: int, n: int = None,

@@ -123,11 +123,15 @@ class ExecutionPlan:
         if kind not in fns:
             raise KeyError(f"unknown kind {kind!r}; available: "
                            f"{sorted(fns)}")
-        # The memo is per-plan, but the exchange precision still joins the
-        # key: plans rebuilt at a different ``exchange_dtype`` that share a
-        # cache (e.g. via copy/replace) must never serve each other's
-        # compiled entries.
-        key = (kind, self.info.get("exchange_dtype", "f32"))
+        # The memo is per-plan, but the exchange precision and partition
+        # identity still join the key: plans rebuilt at a different
+        # ``exchange_dtype`` or ``partition=`` that share a cache (e.g.
+        # via copy/replace) must never serve each other's compiled
+        # entries.  GeneralPartition plans carry a content fingerprint;
+        # banded plans key on the literal "banded".
+        key = (kind, self.info.get("exchange_dtype", "f32"),
+               self.info.get("partition_fingerprint",
+                             self.info.get("partition", "banded")))
         cache = self._jit_cache()
         if key not in cache:
             cache[key] = jax.jit(fns[kind])
@@ -147,7 +151,9 @@ class ExecutionPlan:
         hold the returned callable in the request loop rather than calling
         ``compiled_solve(...)`` per request when passing large arrays.
         """
-        key = (("solve", method, self.info.get("exchange_dtype", "f32"))
+        key = (("solve", method, self.info.get("exchange_dtype", "f32"),
+                self.info.get("partition_fingerprint",
+                              self.info.get("partition", "banded")))
                + canonical_solve_items(solve_kwargs))
         cache = self._jit_cache()
         if key not in cache:

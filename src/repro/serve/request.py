@@ -46,6 +46,11 @@ class CompatKey:
     #: Mixed-precision requests must never coalesce with f32 ones — they
     #: trace to different programs AND answer with different accuracy.
     exchange: str = "f32"
+    #: Partition identity: "banded" for the ring plans, the
+    #: GeneralPartition content fingerprint otherwise.  Plans sharded by
+    #: different partitions trace to different exchange programs and must
+    #: never coalesce.
+    partition: str = "banded"
     extra: Tuple[Tuple[str, Any], ...] = ()
 
     def label(self) -> str:
@@ -56,10 +61,19 @@ class CompatKey:
         parts.append(f"order={self.order}")
         if self.exchange != "f32":
             parts.append(f"exchange={self.exchange}")
+        if self.partition != "banded":
+            parts.append(f"partition={self.partition}")
         if self.tau is not None:
             parts.append(f"tau={self.tau}")
         parts += [f"{k}={v}" for k, v in self.extra]
         return ":".join(parts)
+
+
+def _plan_partition(plan) -> str:
+    """Partition identity for the compat key: the GeneralPartition content
+    fingerprint when present, else the plan's partition family name."""
+    return str(plan.info.get("partition_fingerprint")
+               or plan.info.get("partition", "banded"))
 
 
 def compat_key(op_name: str, plan, kind: str, method: Optional[str],
@@ -79,7 +93,8 @@ def compat_key(op_name: str, plan, kind: str, method: Optional[str],
                 f"kind {kind!r} takes no method/solver kwargs "
                 f"(got method={method!r}, kwargs={sorted(kwargs)})")
         return CompatKey(op=op_name, kind=kind, order=int(plan.K),
-                         exchange=plan.info.get("exchange_dtype", "f32"))
+                         exchange=plan.info.get("exchange_dtype", "f32"),
+                         partition=_plan_partition(plan))
     if method is None:
         raise ValueError("kind='solve' requires method=")
     if kwargs.get("history"):
@@ -94,7 +109,8 @@ def compat_key(op_name: str, plan, kind: str, method: Optional[str],
         {k: v for k, v in kwargs.items() if k not in ("n_iters", "tau")})
     return CompatKey(op=op_name, kind=kind, method=method, order=order,
                      tau=tau, extra=extra,
-                     exchange=plan.info.get("exchange_dtype", "f32"))
+                     exchange=plan.info.get("exchange_dtype", "f32"),
+                     partition=_plan_partition(plan))
 
 
 @dataclasses.dataclass(frozen=True)

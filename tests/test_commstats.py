@@ -139,3 +139,57 @@ def test_commstats_closed_form_8shards():
     the closed form is known exactly, for every sharded backend."""
     out = run_payload(PAYLOAD, n_devices=8)
     assert "COMMSTATS OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Multi-offset (GeneralPartition) round counting
+# ---------------------------------------------------------------------------
+def test_exchange_rounds_declared_divisor_wins():
+    """A plan-declared exchange_collectives_per_round divides the raw
+    ppermute tally — authoritative even when perms collide (at S=2 both
+    ring directions share one perm; perm-grouping alone would report 2K)."""
+    calls = (CollectiveCall("ppermute", count=20, elems=4, nbytes=16,
+                            perm=((0, 1), (1, 0))),)
+    assert CommStats(calls, n_shards=2,
+                     ppermutes_per_round=2).exchange_rounds == 10
+    assert CommStats(calls, n_shards=2,
+                     ppermutes_per_round=1).exchange_rounds == 20
+
+
+def test_exchange_rounds_groups_by_perm():
+    """Without a declared divisor, rounds = the max per-perm tally: a
+    4-offset general exchange issues 4 distinct ppermutes per matvec, so
+    K matvecs measure K rounds, not 4K/2."""
+    K = 9
+    calls = tuple(
+        CollectiveCall("ppermute", count=K, elems=4, nbytes=16,
+                       perm=tuple((i, (i + d) % 8) for i in range(8)))
+        for d in (1, 2, 6, 7))
+    assert CommStats(calls, n_shards=8).exchange_rounds == K
+
+
+def test_exchange_rounds_legacy_pair_fallback():
+    """Hand-built stats with no perm info keep the historical pair
+    assumption (pp // 2)."""
+    calls = (CollectiveCall("ppermute", count=20, elems=4, nbytes=16),)
+    assert CommStats(calls, n_shards=4).exchange_rounds == 10
+
+
+def test_measured_perm_attached_to_calls():
+    """measure() records each ppermute's perm so distinct exchange
+    directions are distinct tally entries."""
+    mesh = jax.make_mesh((1,), ("x",))
+
+    def fn(v):
+        def inner(vl):
+            a = jax.lax.ppermute(vl, "x", perm=[(0, 0)])
+            return a + jax.lax.ppermute(vl, "x", perm=[(0, 0)])
+        return jax.shard_map(inner, mesh=mesh,
+                             in_specs=jax.sharding.PartitionSpec("x"),
+                             out_specs=jax.sharding.PartitionSpec("x"),
+                             check_vma=False)(v)
+
+    stats = measure(fn, jax.ShapeDtypeStruct((8,), np.float32), n_shards=1)
+    pp = [c for c in stats.collectives if c.primitive == "ppermute"]
+    assert len(pp) == 1 and pp[0].count == 2
+    assert pp[0].perm == ((0, 0),)

@@ -115,6 +115,23 @@ def _lint_operator():
         lmax=lmax, K=LINT_K)
 
 
+def _lint_community_operator():
+    """A small non-banded community graph: the GeneralPartition matrix's
+    operator (the banded `_lint_operator` would reduce to the ring plan)."""
+    import numpy as np
+
+    from repro.core import wavelets
+    from repro.dist import GraphOperator
+    from repro.dist.partition import community_graph_csr
+
+    csr, meta = community_graph_csr(64, n_communities=8, seed=0)
+    lmax = meta["lmax"]
+    return GraphOperator(
+        P=np.asarray(csr.to_dense()),
+        multipliers=wavelets.sgwt_multipliers(lmax, J=LINT_J),
+        lmax=lmax, K=LINT_K)
+
+
 def jaxpr_findings(shards: int) -> List:
     import jax
 
@@ -137,6 +154,18 @@ def jaxpr_findings(shards: int) -> List:
             continue  # single-device backends are covered at shards=1
         else:
             plan = op.plan(backend)
+        findings += check_plan(
+            plan, batches=LINT_BATCHES,
+            budget=plan.info.get("sweep_vmem_budget"),
+            solve_methods=("jacobi",))
+    # GeneralPartition matrix: the same invariants (JX-PPERMUTE-BIJECTION
+    # in particular — the multi-offset exchange realizes each round as
+    # complete ppermute bijections) on a non-banded community graph.
+    community_op = _lint_community_operator()
+    for backend in ("halo", "pallas_halo"):
+        if backend not in available_backends():
+            continue
+        plan = community_op.plan(backend, mesh=mesh, partition="general")
         findings += check_plan(
             plan, batches=LINT_BATCHES,
             budget=plan.info.get("sweep_vmem_budget"),
