@@ -25,7 +25,11 @@ through the sharded `plan.solve` path and writes the repo-root
 BENCH_fig2.json error-vs-measured-communication table.  The `serving`
 benchmark (bench_serving) replays seeded Poisson request streams through
 the repro.serve continuous-batching engine at several offered loads and
-writes the repo-root BENCH_serving.json latency/throughput table.
+writes the repo-root BENCH_serving.json latency/throughput table.  The
+`faults` benchmark (bench_faults) measures graceful degradation under
+seeded link faults — the (exchange_dtype x degradation policy x drop
+probability) error ladder at 8 shards plus a straggler-injected serving
+replay — and writes the repo-root BENCH_faults.json.
 """
 import argparse
 import sys
@@ -36,8 +40,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale trial counts")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: "
-                    "fig1,fig2,lasso,comm,kernels,scaling,throughput,serving")
+                    help="comma-separated subset: fig1,fig2,lasso,comm,"
+                    "kernels,scaling,throughput,serving,faults")
     ap.add_argument("--backend", default=None,
                     help="comma-separated execution backends to sweep "
                     "(dense,pallas,halo,pallas_halo,allgather) through the "
@@ -46,13 +50,13 @@ def main() -> None:
                     help="directory for per-backend JSON results")
     args = ap.parse_args()
 
-    from . import (bench_comm, bench_fig1_denoising, bench_fig2_methods,
-                   bench_kernels, bench_lasso, bench_scaling,
-                   bench_serving, bench_throughput)
+    from . import (bench_comm, bench_faults, bench_fig1_denoising,
+                   bench_fig2_methods, bench_kernels, bench_lasso,
+                   bench_scaling, bench_serving, bench_throughput)
 
     backends = args.backend.split(",") if args.backend else None
     wanted = set((args.only or
-                  "fig1,fig2,lasso,comm,kernels,throughput,serving")
+                  "fig1,fig2,lasso,comm,kernels,throughput,serving,faults")
                  .split(","))
     print("name,us_per_call,derived")
     if "fig1" in wanted:
@@ -133,6 +137,27 @@ def main() -> None:
                       else bench_serving.DEFAULT_BACKENDS),
             n_requests=300 if args.full else 150,
             json_path=serving_json)
+    if "faults" in wanted:
+        # Fault-injection degradation ladder + straggler serving replay
+        # (8-shard subprocess when the current process is single-device).
+        # The tracked repo-root BENCH_faults.json is only rewritten by a
+        # default run; the ladder only runs on halo-exchange backends.
+        import os
+
+        fault_backend = bench_faults.DEFAULT_BACKEND
+        if backends is not None:
+            sharded = [b for b in backends if b in ("halo", "pallas_halo")]
+            fault_backend = sharded[0] if sharded else None
+        if fault_backend is None:
+            print("# faults skipped: --backend lists no halo-exchange "
+                  "backend (halo, pallas_halo)", flush=True)
+        else:
+            if backends is None and args.json_dir == ".":
+                faults_json = bench_faults.DEFAULT_JSON
+            else:
+                faults_json = os.path.join(args.json_dir,
+                                           "BENCH_faults.json")
+            bench_faults.run(backend=fault_backend, json_path=faults_json)
     if "scaling" in wanted:
         if backends is None:
             bench_scaling.run(backends=None, json_dir=args.json_dir)

@@ -18,9 +18,9 @@ catalogue lives in ARCHITECTURE.md ("Static invariants").
 """
 from .astlint import AST_RULES, lint_file, lint_source, lint_tree
 from .checks import (DTYPE_MIXED_OK, JAXPR_RULES, check_batch_schedule,
-                     check_comm_schedule, check_dtype_discipline, check_plan,
-                     check_vmem_budget, collective_schedule, pallas_footprint,
-                     perm_problems)
+                     check_comm_schedule, check_dtype_discipline,
+                     check_fault_schedule, check_plan, check_vmem_budget,
+                     collective_schedule, pallas_footprint, perm_problems)
 from .findings import (AllowEntry, Allowlist, AllowlistError, Finding,
                        ScaffoldEntry)
 from .jaxpr_walk import (COLLECTIVE_PRIMITIVES, EqnContext, collect_eqns,
@@ -43,6 +43,7 @@ __all__ = [
     "check_batch_schedule",
     "check_comm_schedule",
     "check_dtype_discipline",
+    "check_fault_schedule",
     "check_plan",
     "check_vmem_budget",
     "collect_eqns",

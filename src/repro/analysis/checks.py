@@ -18,6 +18,14 @@ now only re-verified where a test author remembered to assert it:
   schedule (primitive, axis, permutation, trip multiplier) traced at B=1
   must equal the one traced at B=64.  Payload shapes legitimately scale
   with B and are excluded.
+* **Fault-injection honesty** (:func:`check_fault_schedule`;
+  ``JX-FAULT-NO-EXTRA-COLLECTIVES``) — a fault-injected plan
+  (``fault_spec=`` on the sharded backends, :mod:`repro.dist.faults`)
+  must trace the *identical* ordered collective schedule as its clean
+  twin: faults are receiver-side value substitutions after the
+  ``ppermute``, never extra rounds, retries, or control flow around the
+  collective — so `commstats` keeps measuring exactly the paper's 2K|E|
+  messages under every injected configuration.
 * **VMEM budget** (:func:`check_vmem_budget`; ``JX-VMEM-BUDGET``) — every
   ``pallas_call`` in the trace has its block + scratch footprint
   recomputed from its BlockSpecs and asserted under the PR-5 sweep budget
@@ -58,6 +66,7 @@ JAXPR_RULES = (
     "JX-DTYPE-F64",
     "JX-DTYPE-PROMOTION",
     "JX-DTYPE-MIXED-OK",
+    "JX-FAULT-NO-EXTRA-COLLECTIVES",
 )
 
 #: Sanctioned mixed-float-width sites (rule ``JX-DTYPE-MIXED-OK``): source
@@ -194,6 +203,65 @@ def check_batch_schedule(fn_for_batch: Callable[[int], Tuple[Callable, tuple]],
                     f"({len(sched)} vs {len(ref)} entries): the batched "
                     "path re-runs or re-orders the exchange rounds instead "
                     "of sharing them across the batch")))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection honesty
+# ---------------------------------------------------------------------------
+def check_fault_schedule(clean_plan, faulted_plan,
+                         n: Optional[int] = None,
+                         solve_methods: Sequence[str] = ()) -> List[Finding]:
+    """JX-FAULT-NO-EXTRA-COLLECTIVES: faulted == clean collective schedule.
+
+    Traces apply / apply_adjoint / apply_gram (plus ``plan.solve`` for
+    each of `solve_methods`) on both plans and requires the ordered
+    static collective schedules (:func:`collective_schedule` — primitive,
+    axis, permutation, trip multiplier; payload shapes excluded) to be
+    identical.  Any difference means the fault injection touched the
+    exchange *structure* instead of only the received values, which
+    breaks the 2K|E| accounting contract of `repro.dist.faults`.
+    """
+    op = clean_plan.op
+    if n is None:
+        if callable(op.P):
+            raise ValueError("check_fault_schedule needs n= for a closure P")
+        n = int(np.asarray(op.P).shape[0])
+    fkey = faulted_plan.info.get("fault_key", "none")
+    findings: List[Finding] = []
+
+    def spec(*shape) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(shape, np.float32)
+
+    targets: List[Tuple[str, Callable, Callable, tuple]] = [
+        ("apply", clean_plan.apply, faulted_plan.apply, (spec(n),)),
+        ("apply_adjoint", clean_plan.apply_adjoint,
+         faulted_plan.apply_adjoint, (spec(op.eta, n),)),
+        ("apply_gram", clean_plan.apply_gram, faulted_plan.apply_gram,
+         (spec(n),)),
+    ]
+    for method in solve_methods:
+        def _solve(plan, _m=method):
+            return lambda y: plan.solve(y, _m, tau=0.5).x
+
+        targets.append((f"solve[{method}]", _solve(clean_plan),
+                        _solve(faulted_plan), (spec(n),)))
+
+    for name, clean_fn, faulted_fn, args in targets:
+        label = f"{faulted_plan.backend}.{name}"
+        ref = collective_schedule(clean_fn, *args)
+        sched = collective_schedule(faulted_fn, *args)
+        if sched != ref:
+            findings.append(Finding(
+                rule="JX-FAULT-NO-EXTRA-COLLECTIVES", path=label,
+                symbol=label,
+                message=(
+                    f"fault-injected plan ({fkey}) traces a different "
+                    f"collective schedule than the clean plan "
+                    f"({len(sched)} vs {len(ref)} entries): faults must "
+                    "be receiver-side value substitutions after the "
+                    "ppermute, never extra rounds or reordered exchanges "
+                    "— the 2K|E| accounting depends on it")))
     return findings
 
 

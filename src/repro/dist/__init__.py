@@ -18,8 +18,12 @@
   `community_graph_csr`): per-shard Block-ELL plus a ring-offset
   exchange plan consumed by the halo backends via
   ``plan(..., partition="general")``.
+* :mod:`repro.dist.faults`    — deterministic, seeded link-fault
+  injection for the sharded exchange (`FaultSpec`, graceful-degradation
+  policies) behind ``plan(..., fault_spec=...)``.
 """
-from . import commstats, gossip, partition, sharding, solvers
+from . import commstats, faults, gossip, partition, sharding, solvers
+from .faults import DEGRADATIONS, FaultSpec
 from .backends import available_backends, get_backend, register_backend
 from .commstats import (CommStats, plan_comm_stats, solve_comm_stats,
                         verify_message_scaling)
@@ -32,7 +36,9 @@ from .solvers import SolveResult, solve_plan
 __all__ = [
     "CSRMatrix",
     "CommStats",
+    "DEGRADATIONS",
     "ExecutionPlan",
+    "FaultSpec",
     "GeneralPartition",
     "GraphOperator",
     "OverfullSlotsError",
@@ -42,6 +48,7 @@ __all__ = [
     "available_backends",
     "commstats",
     "community_graph_csr",
+    "faults",
     "get_backend",
     "gossip",
     "make_rules",

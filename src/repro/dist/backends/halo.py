@@ -37,7 +37,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ... import _compat  # noqa: F401  (jax.shard_map / axis_size on old jax)
 from ...core import chebyshev as cheb
 from ...core.lasso import soft_threshold
-from .. import quantize
+from .. import faults, quantize
 from . import register_backend
 
 shard_map = jax.shard_map
@@ -175,7 +175,8 @@ def _vspec(ndim: int, axis: str) -> P:
 # Local matvecs (run inside shard_map)
 # ---------------------------------------------------------------------------
 def _halo_matvec(diag, left, right, nl: int, h: int, axis: str,
-                 exchange_dtype: str = "f32", error_feedback: bool = True):
+                 exchange_dtype: str = "f32", error_feedback: bool = True,
+                 fault_spec=None, degradation: str = "zero_fill"):
     """Interior/boundary-split matvec along the *last* axis of x.
 
     x: (..., nl) local block; left/right are the (nl, h) boundary
@@ -200,26 +201,39 @@ def _halo_matvec(diag, left, right, nl: int, h: int, axis: str,
     builds the zero residuals.  `core.chebyshev` / `kernels.ops` opt in
     via ``getattr(matvec, "init_state", None)``.
 
+    With an *active* ``fault_spec`` (see `repro.dist.faults`) the closure
+    is stateful for a second reason: the state carries the int32 round
+    counter and the last-delivered tile per incoming link, and every
+    received tile passes through the injector's wire-noise / stale /
+    drop channels AFTER the ppermute — the collective schedule (and the
+    measured 2K|E| rounds) is bitwise identical to the clean plan's.
+
     The permute indices form a ring; the first/last shard's out-of-range
     contribution is killed by the zero left/right coupling blocks
     (partition_banded leaves left[0] = right[-1] = 0).
     """
     size = jax.lax.axis_size(axis)
     dt = quantize.validate_exchange_dtype(exchange_dtype)
+    inj = faults.make_injector(fault_spec, degradation, axis, size > 1)
+    use_ef = dt == "int8" and error_feedback and size > 1
 
     def _run(x, state):
         head = x[..., :h]
         tail = x[..., nl - h:nl]
+        if inj is not None:
+            k, carried, ef_state = state
+        else:
+            ef_state = state
         if size > 1:
-            if state is None:
+            if ef_state is None:
                 wire_tail = quantize.encode(tail, dt)
                 wire_head = quantize.encode(head, dt)
-                new_state = None
+                new_ef = None
             else:
-                r_tail, r_head = state
+                r_tail, r_head = ef_state
                 wire_tail, r_tail = quantize.ef_encode(tail, r_tail, dt)
                 wire_head, r_head = quantize.ef_encode(head, r_head, dt)
-                new_state = (r_tail, r_head)
+                new_ef = (r_tail, r_head)
             # (1) issue the boundary-tile exchange: shard s receives s-1's
             # tail (read by `left`) and s+1's head (read by `right`).
             # One ppermute per direction — the int8 scale rides inside the
@@ -236,9 +250,20 @@ def _halo_matvec(diag, left, right, nl: int, h: int, axis: str,
             # exchange
             y = jnp.einsum("ij,...j->...i", diag, x)
             # (3) decode + boundary coupling, consumed after the interior
-            # product
+            # product; injected faults perturb only what the receiver
+            # consumes — the wire traffic above is already committed
+            if inj is not None:
+                from_left = inj.wire(from_left, k, 0, dt)
+                from_right = inj.wire(from_right, k, 1, dt)
             from_left = quantize.decode(from_left, dt, x.dtype)
             from_right = quantize.decode(from_right, dt, x.dtype)
+            if inj is not None:
+                c_l, c_r = carried
+                from_left, c_l = inj.recv(from_left, c_l, k, 0)
+                from_right, c_r = inj.recv(from_right, c_r, k, 1)
+                new_state = (k + 1, (c_l, c_r), new_ef)
+            else:
+                new_state = new_ef
         else:
             from_left, from_right = tail, head
             new_state = state
@@ -249,10 +274,23 @@ def _halo_matvec(diag, left, right, nl: int, h: int, axis: str,
 
     def mv(x, state=None):
         if state is None:
+            if inj is not None:
+                # one-shot stateless call under faults: a fresh round-0
+                # state, deterministic per seed, result state discarded
+                return _run(x, mv.init_state(x))[0]
             return _run(x, None)[0]
         return _run(x, state)
 
-    if dt == "int8" and error_feedback and size > 1:
+    if inj is not None:
+        def init_state(x):
+            tail = x[..., nl - h:nl]
+            head = x[..., :h]
+            ef0 = ((quantize.ef_init(tail), quantize.ef_init(head))
+                   if use_ef else None)
+            return (inj.init_round(), inj.init_carried((tail, head)), ef0)
+
+        mv.init_state = init_state
+    elif use_ef:
         def init_state(x):
             return (quantize.ef_init(x[..., nl - h:nl]),
                     quantize.ef_init(x[..., :h]))
@@ -278,6 +316,8 @@ def dist_cheb_apply(
     axis: str = "graph",
     exchange_dtype: str = "f32",
     error_feedback: bool = True,
+    fault_spec=None,
+    degradation: str = "zero_fill",
 ) -> Array:
     """Sharded Phi_tilde x (Algorithm 1). x: (..., n_padded) — leading batch
     dims ride the same K halo-exchange rounds ((B, nl) boundary tiles move
@@ -298,7 +338,8 @@ def dist_cheb_apply(
     )
     def run(diag, left, right, xl, c):
         mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis,
-                          exchange_dtype, error_feedback)
+                          exchange_dtype, error_feedback,
+                          fault_spec, degradation)
         return cheb.cheb_apply(mv, xl, c, lmax)
 
     out = run(parts.diag, left_h, right_h, x, c)
@@ -314,6 +355,8 @@ def dist_cheb_apply_adjoint(
     axis: str = "graph",
     exchange_dtype: str = "f32",
     error_feedback: bool = True,
+    fault_spec=None,
+    degradation: str = "zero_fill",
 ) -> Array:
     """Sharded Phi_tilde^* a (Algorithm 2). a: (..., eta, n_padded) ->
     (..., n_padded); one ppermute pair moves all eta streams (and every
@@ -324,7 +367,8 @@ def dist_cheb_apply_adjoint(
 
     def run(diag, left, right, al, c):
         mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis,
-                          exchange_dtype, error_feedback)
+                          exchange_dtype, error_feedback,
+                          fault_spec, degradation)
         return cheb.cheb_apply_adjoint(mv, al, c, lmax)
 
     return _sharded(
@@ -343,6 +387,8 @@ def dist_cheb_apply_gram(
     axis: str = "graph",
     exchange_dtype: str = "f32",
     error_feedback: bool = True,
+    fault_spec=None,
+    degradation: str = "zero_fill",
 ) -> Array:
     """Sharded Phi~*Phi~ x via product coefficients (Section IV-C).
     x: (..., n_padded) -> (..., n_padded)."""
@@ -352,7 +398,8 @@ def dist_cheb_apply_gram(
 
     def run(diag, left, right, xl, d):
         mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis,
-                          exchange_dtype, error_feedback)
+                          exchange_dtype, error_feedback,
+                          fault_spec, degradation)
         return cheb.cheb_apply(mv, xl, d, lmax)
 
     return _sharded(
@@ -374,6 +421,8 @@ def dist_lasso(
     axis: str = "graph",
     exchange_dtype: str = "f32",
     error_feedback: bool = True,
+    fault_spec=None,
+    degradation: str = "zero_fill",
 ) -> Tuple[Array, Array]:
     """Fully sharded Algorithm 3 (distributed lasso).
 
@@ -395,7 +444,8 @@ def dist_lasso(
 
     def run(diag, left, right, yl, c, thresh):
         mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis,
-                          exchange_dtype, error_feedback)
+                          exchange_dtype, error_feedback,
+                          fault_spec, degradation)
         phi_y = cheb.cheb_apply(mv, yl, c, lmax)  # Alg. 3 line 3
 
         def body(a, _):
@@ -444,6 +494,7 @@ def halo_bytes_per_apply(parts: BandedPartition, K: int, eta: int = 1,
 def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
           allow_leak: bool = False, exchange_dtype: str = "f32",
           error_feedback: bool = True, partition_method: str = "bfs",
+          fault_spec=None, degradation: str = "zero_fill",
           **options):
     """Build an ExecutionPlan running every application inside a shard_map
     over `mesh` with ring halo exchange.
@@ -466,6 +517,8 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
     from ..partition import build_general_plan, resolve_partition_arg
 
     quantize.validate_exchange_dtype(exchange_dtype)
+    faults.validate_degradation(degradation)
+    fault_spec = faults.resolve_fault_spec(fault_spec)
     if mesh is None:
         mesh = jax.make_mesh((len(jax.devices()),), ("graph",))
     axis = axis or mesh.axis_names[0]
@@ -477,6 +530,8 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
                                   interior="dense",
                                   exchange_dtype=exchange_dtype,
                                   error_feedback=error_feedback,
+                                  fault_spec=fault_spec,
+                                  degradation=degradation,
                                   backend_name="halo")
     if isinstance(partition, str):
         partition = None  # "banded": build from op.P below
@@ -499,18 +554,19 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
     def apply(f: Array) -> Array:
         out = dist_cheb_apply(mesh, parts, pad_signal(f, parts),
                               jnp.atleast_2d(jnp.asarray(coeffs, f.dtype)),
-                              lmax, axis, exchange_dtype, error_feedback)
+                              lmax, axis, exchange_dtype, error_feedback,
+                              fault_spec, degradation)
         return out[..., :n]
 
     def apply_adjoint(a: Array) -> Array:
         return dist_cheb_apply_adjoint(
             mesh, parts, pad_signal(a, parts), coeffs, lmax, axis,
-            exchange_dtype, error_feedback)[..., :n]
+            exchange_dtype, error_feedback, fault_spec, degradation)[..., :n]
 
     def apply_gram(f: Array) -> Array:
         return dist_cheb_apply_gram(
             mesh, parts, pad_signal(f, parts), coeffs, lmax, axis,
-            exchange_dtype, error_feedback)[..., :n]
+            exchange_dtype, error_feedback, fault_spec, degradation)[..., :n]
 
     def solve_lasso(y, mu, gamma, n_iters):
         from ...core.lasso import LassoResult
@@ -519,7 +575,9 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
                                     coeffs, lmax, mu, gamma=gamma,
                                     n_iters=n_iters, axis=axis,
                                     exchange_dtype=exchange_dtype,
-                                    error_feedback=error_feedback)
+                                    error_feedback=error_feedback,
+                                    fault_spec=fault_spec,
+                                    degradation=degradation)
         return LassoResult(coeffs=a_star[..., :n], signal=y_star[..., :n],
                            objective=jnp.nan, n_iters=n_iters, fused=True)
 
@@ -543,7 +601,8 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
 
         def run(diag, left, right, *rest):
             mv = _halo_matvec(diag[0], left[0], right[0], nl, h, axis,
-                              exchange_dtype, error_feedback)
+                              exchange_dtype, error_feedback,
+                              fault_spec, degradation)
             return fn(mv, *rest)
 
         left_h, right_h = parts.boundary_couplings()
@@ -568,6 +627,9 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
             "exchange_collectives_per_round": 2,
             "exchange_dtype": exchange_dtype,
             "error_feedback": bool(error_feedback),
+            "fault_spec": faults.spec_info(fault_spec),
+            "degradation": degradation,
+            "fault_key": faults.fault_key(fault_spec, degradation),
             # forward/gram ship an eta-independent (..., h) tile per order;
             # only the adjoint's iterate carries the eta streams
             "halo_bytes_per_apply": halo_bytes_per_apply(

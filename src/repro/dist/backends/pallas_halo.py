@@ -60,7 +60,7 @@ from ...core import chebyshev as cheb
 from ...core import graph as graphmod
 from ...core.lasso import soft_threshold
 from ...kernels import ops
-from .. import quantize
+from .. import faults, quantize
 from ..sharding import ShardingRules, make_rules
 from . import register_backend
 from .halo import (BandedPartition, _coupling_bandwidth, _sharded,
@@ -175,7 +175,8 @@ def _halo_row_matvec(local_A: graphmod.BlockELL, left: Array, right: Array,
                      vmem_budget=None, n_shards=None,
                      exchange_dtype: str = "f32",
                      error_feedback: bool = True,
-                     sweep_dtype: Optional[str] = None):
+                     sweep_dtype: Optional[str] = None,
+                     fault_spec=None, degradation: str = "zero_fill"):
     """Interior/boundary-split matvec along the last axis of x.
 
     x: (..., pnl) local block on the shard's **Block-ELL padded domain**
@@ -215,20 +216,26 @@ def _halo_row_matvec(local_A: graphmod.BlockELL, left: Array, right: Array,
     """
     size = n_shards if n_shards is not None else jax.lax.axis_size(axis)
     dt = quantize.validate_exchange_dtype(exchange_dtype)
+    inj = faults.make_injector(fault_spec, degradation, axis, size > 1)
+    use_ef = dt == "int8" and error_feedback and size > 1
 
     def _run(x, state):
         head = x[..., :h]
         tail = x[..., nl - h:nl]
+        if inj is not None:
+            k, carried, ef_state = state
+        else:
+            ef_state = state
         if size > 1:
-            if state is None:
+            if ef_state is None:
                 wire_tail = quantize.encode(tail, dt)
                 wire_head = quantize.encode(head, dt)
-                new_state = None
+                new_ef = None
             else:
-                r_tail, r_head = state
+                r_tail, r_head = ef_state
                 wire_tail, r_tail = quantize.ef_encode(tail, r_tail, dt)
                 wire_head, r_head = quantize.ef_encode(head, r_head, dt)
-                new_state = (r_tail, r_head)
+                new_ef = (r_tail, r_head)
             # (1) boundary-row exchange: shard s receives s-1's tail (read
             # by `left`) and s+1's head (read by `right`); one ppermute
             # per direction keeps measured rounds at the paper's 2K|E|
@@ -240,9 +247,21 @@ def _halo_row_matvec(local_A: graphmod.BlockELL, left: Array, right: Array,
                 perm=[(i, (i - 1) % size) for i in range(size)])
             # (2) interior Block-ELL SpMV — overlaps the exchange
             y = ops.spmv(local_A, x, use_pallas=use_pallas)
-            # (3) decode + boundary couplings on arrival
+            # (3) decode + boundary couplings on arrival; injected faults
+            # perturb only what the receiver consumes — the wire traffic
+            # above is already committed
+            if inj is not None:
+                from_left = inj.wire(from_left, k, 0, dt)
+                from_right = inj.wire(from_right, k, 1, dt)
             from_left = quantize.decode(from_left, dt, x.dtype)
             from_right = quantize.decode(from_right, dt, x.dtype)
+            if inj is not None:
+                c_l, c_r = carried
+                from_left, c_l = inj.recv(from_left, c_l, k, 0)
+                from_right, c_r = inj.recv(from_right, c_r, k, 1)
+                new_state = (k + 1, (c_l, c_r), new_ef)
+            else:
+                new_state = new_ef
         else:
             from_left, from_right = tail, head
             new_state = state
@@ -253,10 +272,21 @@ def _halo_row_matvec(local_A: graphmod.BlockELL, left: Array, right: Array,
 
     def mv(x, state=None):
         if state is None:
+            if inj is not None:
+                return _run(x, mv.init_state(x))[0]
             return _run(x, None)[0]
         return _run(x, state)
 
-    if dt == "int8" and error_feedback and size > 1:
+    if inj is not None:
+        def init_state(x):
+            tail = x[..., nl - h:nl]
+            head = x[..., :h]
+            ef0 = ((quantize.ef_init(tail), quantize.ef_init(head))
+                   if use_ef else None)
+            return (inj.init_round(), inj.init_carried((tail, head)), ef0)
+
+        mv.init_state = init_state
+    elif use_ef:
         def init_state(x):
             return (quantize.ef_init(x[..., nl - h:nl]),
                     quantize.ef_init(x[..., :h]))
@@ -297,7 +327,8 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
           vmem_budget: Optional[int] = None,
           exchange_dtype: str = "f32", error_feedback: bool = True,
           sweep_dtype: Optional[str] = None,
-          partition_method: str = "bfs", **options):
+          partition_method: str = "bfs",
+          fault_spec=None, degradation: str = "zero_fill", **options):
     """Build an ExecutionPlan running the fused Pallas Chebyshev recurrence
     per shard with boundary-row halo exchange.
 
@@ -327,6 +358,8 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
     from ..partition import build_general_plan, resolve_partition_arg
 
     quantize.validate_exchange_dtype(exchange_dtype)
+    faults.validate_degradation(degradation)
+    fault_spec = faults.resolve_fault_spec(fault_spec)
     if mesh is None:
         mesh = jax.make_mesh((len(jax.devices()),), ("graph",))
     axis = axis or mesh.axis_names[0]
@@ -341,6 +374,8 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
                                   sweep_dtype=sweep_dtype,
                                   exchange_dtype=exchange_dtype,
                                   error_feedback=error_feedback,
+                                  fault_spec=fault_spec,
+                                  degradation=degradation,
                                   backend_name="pallas_halo")
     if isinstance(partition, str):
         partition = None
@@ -381,7 +416,8 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
                                     mask=mask[0], n=nl)
         return _halo_row_matvec(local_A, left[0], right[0], nl, h, axis,
                                 use_pallas, vmem_budget, n_shards,
-                                exchange_dtype, error_feedback, sweep_dtype)
+                                exchange_dtype, error_feedback, sweep_dtype,
+                                fault_spec, degradation)
 
     info = {
         "mesh_axis": axis,
@@ -398,6 +434,9 @@ def build(op, *, mesh=None, partition=None, axis: Optional[str] = None,
         "nnz_blocks": parts.nnz_blocks,
         "exchange_dtype": exchange_dtype,
         "error_feedback": bool(error_feedback),
+        "fault_spec": faults.spec_info(fault_spec),
+        "degradation": degradation,
+        "fault_key": faults.fault_key(fault_spec, degradation),
         "sweep_dtype": sweep_dtype or "f32",
         "sweep_vmem_bytes": ops.cheb_sweep_vmem_bytes(
             graphmod.BlockELL(blocks=parts.blocks[0],

@@ -1,0 +1,256 @@
+"""Deterministic, seeded fault injection for the sharded exchange path.
+
+The paper's premise is distributed filtering on *real* networks — links
+drop packets, deliveries go stale, cheap radios flip bits — and the
+polynomial-recurrence literature (arxiv 2504.14341, 2205.04019) shows the
+Chebyshev/Jacobi iterations tolerate exactly this class of bounded
+per-round perturbation: a lost boundary tile costs accuracy, not
+correctness.  This module makes that claim *measurable*: a
+:class:`FaultSpec` wraps the receive side of every sharded exchange
+(`halo`, `pallas_halo`, banded and `GeneralPartition`) with three seeded,
+reproducible fault channels plus a graceful-degradation policy.
+
+Fault channels (all per-(round, link) Bernoulli, keyed by
+``fold_in(seed, shard, round, link)`` so the same seed replays the same
+fault trace bit-for-bit on any backend):
+
+``drop_prob``
+    The link delivers nothing this round.  The receiver substitutes per
+    its ``degradation`` policy: ``"zero_fill"`` (treat the tile as zero —
+    the neighbour's contribution vanishes for one order) or
+    ``"hold_last"`` (reuse the last delivered tile, carried across rounds
+    through the stateful-matvec protocol of `core.chebyshev` alongside
+    the int8 error-feedback residuals).
+``stale_prob``
+    The link delivers, but late: the receiver consumes the *previous*
+    round's tile (the carried tile) instead of this round's.
+``noise_prob``
+    Per-lane bit-noise on *quantized* wires (bf16 / int8): each wire lane
+    independently has one of its low 8 bits flipped with this
+    probability.  int8 wires flip payload lanes only — the 4
+    bitcast-packed f32 scale lanes ride untouched (a corrupted scale
+    would be a codec failure, not the per-element wire noise modelled
+    here).  f32 wires are unaffected (the lossless-wire baseline).
+
+Honest accounting is the design constraint: every fault is applied to the
+*received* operand **after** the ``ppermute`` — inside jit, with no
+control flow around the collective — so the traced collective schedule is
+*identical* to the clean plan's (checked by the
+``JX-FAULT-NO-EXTRA-COLLECTIVES`` rule in `repro.analysis`) and
+`commstats` measures exactly the paper's 2K|E| rounds under every
+injected configuration.  A dropped message still crosses the wire; what
+degrades is what the receiver *uses*, which is also how lossy physical
+links behave (the sender cannot unsend).
+
+``fault_spec=None`` (or any spec with every probability 0) takes the
+backends' untouched code path — bitwise-identical traces to today's
+exchange, property-tested in ``tests/test_faults.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import quantize
+
+#: Receiver policies for a dropped link.
+DEGRADATIONS = ("zero_fill", "hold_last")
+
+#: fold_in salts separating the per-link fault channels.
+_SALT_NOISE, _SALT_STALE, _SALT_DROP = 101, 103, 107
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Seeded link-fault model for one plan (see module docstring).
+
+    drop_prob / stale_prob are per-(round, link) scalar Bernoullis;
+    noise_prob is per-wire-lane.  `seed` makes the whole fault trace a
+    pure function of (seed, shard, round, link): same seed => the same
+    faults, bitwise, on every run and every backend.
+    """
+
+    drop_prob: float = 0.0
+    stale_prob: float = 0.0
+    noise_prob: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("drop_prob", "stale_prob", "noise_prob"):
+            p = float(getattr(self, name))
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(
+                    f"FaultSpec.{name} must be in [0, 1], got {p}")
+            object.__setattr__(self, name, p)
+        object.__setattr__(self, "seed", int(self.seed))
+
+    @property
+    def active(self) -> bool:
+        """True when any channel can fire — an all-zero spec is the
+        clean exchange and compiles to the identical trace."""
+        return (self.drop_prob > 0.0 or self.stale_prob > 0.0
+                or self.noise_prob > 0.0)
+
+
+def validate_degradation(degradation: str) -> str:
+    if degradation not in DEGRADATIONS:
+        raise ValueError(
+            f"degradation must be one of {DEGRADATIONS}, "
+            f"got {degradation!r}")
+    return degradation
+
+
+def resolve_fault_spec(
+    fault_spec: Union[None, FaultSpec, dict, float]
+) -> Optional[FaultSpec]:
+    """Normalize a backend's ``fault_spec=`` argument.
+
+    Accepts None (no injection), a :class:`FaultSpec`, a kwargs dict, or
+    a bare float shorthand for ``FaultSpec(drop_prob=p)``.
+    """
+    if fault_spec is None:
+        return None
+    if isinstance(fault_spec, FaultSpec):
+        return fault_spec
+    if isinstance(fault_spec, dict):
+        return FaultSpec(**fault_spec)
+    if isinstance(fault_spec, (int, float)) and not isinstance(
+            fault_spec, bool):
+        return FaultSpec(drop_prob=float(fault_spec))
+    raise TypeError(
+        f"fault_spec must be None, a FaultSpec, a dict, or a drop "
+        f"probability, got {type(fault_spec).__name__}")
+
+
+def fault_key(fault_spec, degradation: str = "zero_fill") -> str:
+    """Hashable identity of one (spec, policy) configuration.
+
+    Joins the plan ``info`` dict, the `ExecutionPlan.compiled*` memo keys
+    and the serving `CompatKey` — plans injecting different faults must
+    never share a compiled entry.  Inactive specs collapse to ``"none"``:
+    a p=0 spec traces the identical program, so sharing the clean
+    plan's cache entry is correct (and is what the p=0 identity test
+    asserts).
+    """
+    validate_degradation(degradation)
+    spec = resolve_fault_spec(fault_spec)
+    if spec is None or not spec.active:
+        return "none"
+    return (f"drop{spec.drop_prob:g}-stale{spec.stale_prob:g}"
+            f"-noise{spec.noise_prob:g}-seed{spec.seed}-{degradation}")
+
+
+def spec_info(fault_spec) -> Optional[dict]:
+    """JSON-able form of the spec for `plan.info` / bench artifacts."""
+    spec = resolve_fault_spec(fault_spec)
+    if spec is None:
+        return None
+    return dataclasses.asdict(spec)
+
+
+def make_injector(fault_spec, degradation: str, axis: str,
+                  exchanging: bool) -> Optional["LinkFaultInjector"]:
+    """Injector for one exchange matvec, or None for the clean path.
+
+    `exchanging` is the site's static "this closure really ppermutes"
+    predicate (size > 1, and for the general plan: a nonempty send list)
+    — on a 1-shard mesh there are no links to fail, so the clean path
+    runs and the stateless matvec signature is preserved.  Degradation
+    strings are validated unconditionally so typos raise even at p=0.
+    """
+    validate_degradation(degradation)
+    spec = resolve_fault_spec(fault_spec)
+    if spec is None or not spec.active or not exchanging:
+        return None
+    return LinkFaultInjector(spec, degradation, axis)
+
+
+def _flip_low_bits(bits: jax.Array, key: jax.Array,
+                   prob: float) -> jax.Array:
+    """Flip one of the low 8 bits of each unsigned-int lane w.p. `prob`."""
+    kf, kp = jax.random.split(key)
+    flip = jax.random.bernoulli(kf, prob, bits.shape)
+    pos = jax.random.randint(kp, bits.shape, 0, 8, dtype=jnp.int32)
+    mask = jnp.left_shift(jnp.ones((), bits.dtype),
+                          pos.astype(bits.dtype))
+    return jnp.where(flip, bits ^ mask, bits)
+
+
+class LinkFaultInjector:
+    """Receiver-side fault application for one exchange closure.
+
+    Lives inside the shard_map body; every method is jit-pure and
+    collective-free (the `JX-FAULT-NO-EXTRA-COLLECTIVES` contract).  The
+    per-call key chain ``PRNGKey(seed) -> fold_in(shard) ->
+    fold_in(round) -> fold_in(link)`` makes each (shard, round, link)
+    draw independent and reproducible; `round` is the int32 counter the
+    exchange matvec threads through its state alongside the carried
+    tiles, `link` is the static receive-direction index (banded: 0 =
+    from-left, 1 = from-right; general: the offset index).
+    """
+
+    def __init__(self, spec: FaultSpec, degradation: str, axis: str):
+        self.spec = spec
+        self.degradation = validate_degradation(degradation)
+        self.axis = axis
+
+    def _key(self, round_idx, link: int) -> jax.Array:
+        key = jax.random.PRNGKey(self.spec.seed)
+        key = jax.random.fold_in(key, jax.lax.axis_index(self.axis))
+        key = jax.random.fold_in(key, round_idx)
+        return jax.random.fold_in(key, link)
+
+    def init_round(self):
+        """Round-0 counter for the fault state."""
+        return jnp.zeros((), jnp.int32)
+
+    def init_carried(self, tiles):
+        """Zero carried tiles (one per incoming link): round-0 drops
+        deliver zeros under BOTH policies — before anything arrived,
+        hold_last has nothing to hold."""
+        return tuple(jnp.zeros_like(t) for t in tiles)
+
+    def wire(self, wire: jax.Array, round_idx, link: int,
+             exchange_dtype: str) -> jax.Array:
+        """Bit-noise on one received *encoded* wire (pre-decode)."""
+        if self.spec.noise_prob <= 0.0 or exchange_dtype == "f32":
+            return wire
+        key = jax.random.fold_in(self._key(round_idx, link), _SALT_NOISE)
+        if exchange_dtype == "bf16":
+            bits = jax.lax.bitcast_convert_type(wire, jnp.uint16)
+            bits = _flip_low_bits(bits, key, self.spec.noise_prob)
+            return jax.lax.bitcast_convert_type(bits, jnp.bfloat16)
+        # int8: payload lanes only; the packed f32 scale tail is exempt
+        payload = wire[..., :-quantize._SCALE_TAIL]
+        scale = wire[..., -quantize._SCALE_TAIL:]
+        bits = jax.lax.bitcast_convert_type(payload, jnp.uint8)
+        bits = _flip_low_bits(bits, key, self.spec.noise_prob)
+        payload = jax.lax.bitcast_convert_type(bits, jnp.int8)
+        return jnp.concatenate([payload, scale], axis=-1)
+
+    def recv(self, tile: jax.Array, carried: jax.Array, round_idx,
+             link: int):
+        """Apply stale-delivery and link-drop to one *decoded* tile.
+
+        Returns ``(delivered, new_carried)``: `delivered` is what the
+        boundary coupling consumes this round, and it becomes the
+        carried tile for the next round (so consecutive drops under
+        hold_last keep re-serving the last real delivery).
+        """
+        key = self._key(round_idx, link)
+        out = tile
+        if self.spec.stale_prob > 0.0:
+            stale = jax.random.bernoulli(
+                jax.random.fold_in(key, _SALT_STALE),
+                self.spec.stale_prob)
+            out = jnp.where(stale, carried, out)
+        if self.spec.drop_prob > 0.0:
+            drop = jax.random.bernoulli(
+                jax.random.fold_in(key, _SALT_DROP), self.spec.drop_prob)
+            fallback = (carried if self.degradation == "hold_last"
+                        else jnp.zeros_like(out))
+            out = jnp.where(drop, fallback, out)
+        return out, out

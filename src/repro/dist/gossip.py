@@ -18,9 +18,19 @@ Degradation paths (refs [31]-style robustness):
     payload, ``h + 4`` bytes per h-element row vs ``4h`` for f32 — a
     ``4h/(h+4)`` ~= 4x traffic reduction for large rows; consensus error
     grows to ~the quantization noise floor);
-  * ``drop_left`` / ``drop_right`` — a device ignores its incoming link and
-    substitutes its own state (a straggler/lost-link model: the ring
-    degrades to a path graph, consensus stays bounded).
+  * ``fault_spec=`` — the SAME seeded link-fault model the sharded halo
+    backends use (:mod:`repro.dist.faults`): per-(round, link) Bernoulli
+    drop/stale plus bit-noise on quantized wires, with a
+    ``degradation=`` policy (``"zero_fill"`` | ``"hold_last"``) for
+    dropped deliveries.  Ring link ids match the banded halo convention
+    (0 = from-left, 1 = from-right), so one ``FaultSpec`` replays the
+    identical fault trace on a filter plan and on the gossip ring.
+  * ``drop_left`` / ``drop_right`` — compat shim for the original
+    deterministic lost-link model: a device ignores its incoming link
+    and substitutes its own state (the ring degrades to a path graph,
+    consensus stays bounded).  Kept for callers that want a *static*
+    per-device link disable; probabilistic faults should use
+    ``fault_spec``.
 
 Usage — gradient averaging without a fabric all-reduce (what
 ``repro.launch.train --dp-mode gossip`` does)::
@@ -46,6 +56,7 @@ import numpy as np
 
 from .. import _compat  # noqa: F401  (jax.lax.axis_size on old jax)
 from ..core import chebyshev as cheb
+from . import faults
 from . import quantize as q
 
 Array = jax.Array
@@ -142,11 +153,21 @@ def dequantize_message(wire: Array, out_dtype=jnp.float32) -> Array:
 
 
 def _ring_matvec(axis: str, *, quantize: bool = False,
-                 drop_left=False, drop_right=False):
-    """L_ring matvec: one left + one right neighbour exchange per call."""
-    size = jax.lax.axis_size(axis)
+                 drop_left=False, drop_right=False,
+                 fault_spec=None, degradation: str = "zero_fill"):
+    """L_ring matvec: one left + one right neighbour exchange per call.
 
-    def mv(x: Array) -> Array:
+    With an active `fault_spec` the matvec is stateful (the shared
+    :mod:`repro.dist.faults` protocol: round counter + carried tiles
+    threaded by `cheb_apply`); otherwise the original stateless closure
+    is returned, bitwise-identical to the pre-faults trace.
+    """
+    size = jax.lax.axis_size(axis)
+    inj = faults.make_injector(fault_spec, degradation, axis,
+                               exchanging=size > 1)
+    wire_dtype = "int8" if quantize else "f32"
+
+    def _exchange(x: Array):
         msg = quantize_message(x) if quantize else x
         if size > 1:
             from_left = jax.lax.ppermute(
@@ -155,9 +176,9 @@ def _ring_matvec(axis: str, *, quantize: bool = False,
                 msg, axis, perm=[(i, (i - 1) % size) for i in range(size)])
         else:
             from_left = from_right = msg
-        if quantize:
-            from_left = dequantize_message(from_left, x.dtype)
-            from_right = dequantize_message(from_right, x.dtype)
+        return from_left, from_right
+
+    def _finish(x, from_left, from_right):
         # straggler mitigation: a dropped link substitutes local state,
         # degrading the ring to a path graph (still PSD, still consensus-
         # preserving on the constant component).
@@ -165,20 +186,52 @@ def _ring_matvec(axis: str, *, quantize: bool = False,
         from_right = jnp.where(drop_right, x, from_right)
         return 2.0 * x - from_left - from_right
 
+    if inj is None:
+        def mv(x: Array) -> Array:
+            from_left, from_right = _exchange(x)
+            if quantize:
+                from_left = dequantize_message(from_left, x.dtype)
+                from_right = dequantize_message(from_right, x.dtype)
+            return _finish(x, from_left, from_right)
+
+        return mv
+
+    def mv(x: Array, state):  # type: ignore[misc]
+        k, (c_l, c_r) = state
+        from_left, from_right = _exchange(x)
+        from_left = inj.wire(from_left, k, 0, wire_dtype)
+        from_right = inj.wire(from_right, k, 1, wire_dtype)
+        if quantize:
+            from_left = dequantize_message(from_left, x.dtype)
+            from_right = dequantize_message(from_right, x.dtype)
+        from_left, c_l = inj.recv(from_left, c_l, k, 0)
+        from_right, c_r = inj.recv(from_right, c_r, k, 1)
+        return _finish(x, from_left, from_right), (k + 1, (c_l, c_r))
+
+    def init_state(x):
+        return (inj.init_round(), inj.init_carried((x, x)))
+
+    mv.init_state = init_state
     return mv
 
 
 def gossip_mean(x: Array, axis: str, coeffs, *, quantize: bool = False,
-                drop_left=False, drop_right=False) -> Array:
+                drop_left=False, drop_right=False,
+                fault_spec=None, degradation: str = "zero_fill") -> Array:
     """Approximate per-component mean over the `axis` device ring.
 
     Must be called inside a shard_map over `axis`; `x` is the local block
     (any shape) and the return value has the same shape, each entry
     replaced by (approximately) the across-devices mean.  With the default
     full-order coefficients the consensus is exact to float32.
+
+    `fault_spec` / `degradation` inject the shared
+    :mod:`repro.dist.faults` link-fault model into the ring exchange
+    (None or an all-zero spec = the untouched clean path).
     """
     mv = _ring_matvec(axis, quantize=quantize,
-                      drop_left=drop_left, drop_right=drop_right)
+                      drop_left=drop_left, drop_right=drop_right,
+                      fault_spec=fault_spec, degradation=degradation)
     c = jnp.asarray(np.asarray(coeffs), x.dtype)
     x = jnp.asarray(x)
     if x.ndim == 0:
@@ -188,7 +241,8 @@ def gossip_mean(x: Array, axis: str, coeffs, *, quantize: bool = False,
     return cheb.cheb_apply(mv, x, c, RING_LMAX)
 
 
-def gossip_mean_tree(tree, axis: str, coeffs, *, quantize: bool = False):
+def gossip_mean_tree(tree, axis: str, coeffs, *, quantize: bool = False,
+                     fault_spec=None, degradation: str = "zero_fill"):
     """:func:`gossip_mean` mapped over a pytree of same-sharded leaves.
 
     The gradient-consensus entry point used by ``repro.launch.train
@@ -197,4 +251,6 @@ def gossip_mean_tree(tree, axis: str, coeffs, *, quantize: bool = False):
     inside a shard_map over `axis`, like :func:`gossip_mean`.
     """
     return jax.tree_util.tree_map(
-        lambda leaf: gossip_mean(leaf, axis, coeffs, quantize=quantize), tree)
+        lambda leaf: gossip_mean(leaf, axis, coeffs, quantize=quantize,
+                                 fault_spec=fault_spec,
+                                 degradation=degradation), tree)

@@ -131,7 +131,8 @@ class ExecutionPlan:
         # banded plans key on the literal "banded".
         key = (kind, self.info.get("exchange_dtype", "f32"),
                self.info.get("partition_fingerprint",
-                             self.info.get("partition", "banded")))
+                             self.info.get("partition", "banded")),
+               self.info.get("fault_key", "none"))
         cache = self._jit_cache()
         if key not in cache:
             cache[key] = jax.jit(fns[kind])
@@ -153,7 +154,8 @@ class ExecutionPlan:
         """
         key = (("solve", method, self.info.get("exchange_dtype", "f32"),
                 self.info.get("partition_fingerprint",
-                              self.info.get("partition", "banded")))
+                              self.info.get("partition", "banded")),
+                self.info.get("fault_key", "none"))
                + canonical_solve_items(solve_kwargs))
         cache = self._jit_cache()
         if key not in cache:

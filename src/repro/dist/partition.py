@@ -55,7 +55,7 @@ from ..core import chebyshev as cheb
 from ..core.lasso import soft_threshold
 from ..core import graph as graphmod
 from ..kernels import ops
-from . import quantize
+from . import faults, quantize
 from .sharding import ShardingRules, make_rules
 
 Array = jax.Array
@@ -698,7 +698,8 @@ def partition_to_dense(parts: GeneralPartition) -> np.ndarray:
 # ---------------------------------------------------------------------------
 def make_exchange_matvec(interior, sends, couplings, axis: str, size: int,
                          exchange_dtype: str = "f32",
-                         error_feedback: bool = True):
+                         error_feedback: bool = True,
+                         fault_spec=None, degradation: str = "zero_fill"):
     """Interior/boundary-split matvec over an arbitrary exchange plan.
 
     `interior(x)` is the shard-local product (dense diag einsum or
@@ -718,23 +719,36 @@ def make_exchange_matvec(interior, sends, couplings, axis: str, size: int,
     the dual-signature stateful protocol of `core.chebyshev`
     (``mv(x, state) -> (y, state)``, ``mv.init_state``), threading one
     quantization residual per offset tile across the K orders.
+
+    With an *active* ``fault_spec`` (see `repro.dist.faults`) the state
+    additionally carries the round counter and one last-delivered tile
+    per offset; every received tile passes the injector's wire-noise /
+    stale / drop channels AFTER its ppermute, so the traced collective
+    schedule — and the measured 2K|E| rounds — is identical to the clean
+    plan's.  The offset index is the injector's link id.
     """
     dt = quantize.validate_exchange_dtype(exchange_dtype)
     exchanging = size > 1 and len(sends) > 0
+    inj = faults.make_injector(fault_spec, degradation, axis, exchanging)
+    use_ef = dt == "int8" and error_feedback and exchanging
 
     def _run(x, state):
+        if inj is not None:
+            k, carried, ef_state = state
+        else:
+            ef_state = state
         if exchanging:
             tiles = [jnp.take(x, idx, axis=-1) for idx, _ in sends]
-            if state is None:
+            if ef_state is None:
                 wires = [quantize.encode(t, dt) for t in tiles]
-                new_state = None
+                new_ef = None
             else:
-                wires, new_state = [], []
-                for t, r in zip(tiles, state):
+                wires, new_ef = [], []
+                for t, r in zip(tiles, ef_state):
                     wt, rt = quantize.ef_encode(t, r, dt)
                     wires.append(wt)
-                    new_state.append(rt)
-                new_state = tuple(new_state)
+                    new_ef.append(rt)
+                new_ef = tuple(new_ef)
             # (1) one complete-bijection ppermute per ring offset — the
             # multi-peer generalization of the banded left/right pair
             recvs = [
@@ -745,8 +759,23 @@ def make_exchange_matvec(interior, sends, couplings, axis: str, size: int,
             ]
             # (2) interior product overlaps the exchange
             y = interior(x)
-            # (3) decode on arrival
+            # (3) decode on arrival; injected faults perturb only what the
+            # receiver consumes — the wire traffic is already committed
+            if inj is not None:
+                recvs = [inj.wire(rv, k, j, dt)
+                         for j, rv in enumerate(recvs)]
             recvs = [quantize.decode(rv, dt, x.dtype) for rv in recvs]
+            if inj is not None:
+                new_carried = []
+                faulted = []
+                for j, (rv, c) in enumerate(zip(recvs, carried)):
+                    rv, c = inj.recv(rv, c, k, j)
+                    faulted.append(rv)
+                    new_carried.append(c)
+                recvs = faulted
+                new_state = (k + 1, tuple(new_carried), new_ef)
+            else:
+                new_state = new_ef
         else:
             recvs = [jnp.take(x, idx, axis=-1) for idx, _ in sends]
             new_state = state
@@ -758,10 +787,20 @@ def make_exchange_matvec(interior, sends, couplings, axis: str, size: int,
 
     def mv(x, state=None):
         if state is None:
+            if inj is not None:
+                return _run(x, mv.init_state(x))[0]
             return _run(x, None)[0]
         return _run(x, state)
 
-    if dt == "int8" and error_feedback and exchanging:
+    if inj is not None:
+        def init_state(x):
+            tiles = tuple(jnp.take(x, idx, axis=-1) for idx, _ in sends)
+            ef0 = (tuple(quantize.ef_init(t) for t in tiles)
+                   if use_ef else None)
+            return (inj.init_round(), inj.init_carried(tiles), ef0)
+
+        mv.init_state = init_state
+    elif use_ef:
         def init_state(x):
             return tuple(quantize.ef_init(jnp.take(x, idx, axis=-1))
                          for idx, _ in sends)
@@ -815,6 +854,7 @@ def build_general_plan(op, parts: GeneralPartition, mesh, axis: str, *,
                        sweep_dtype: Optional[str] = None,
                        exchange_dtype: str = "f32",
                        error_feedback: bool = True,
+                       fault_spec=None, degradation: str = "zero_fill",
                        backend_name: str = "pallas_halo"):
     """ExecutionPlan over a :class:`GeneralPartition`.
 
@@ -832,6 +872,8 @@ def build_general_plan(op, parts: GeneralPartition, mesh, axis: str, *,
     from ..core.lasso import LassoResult, _mu_threshold
 
     quantize.validate_exchange_dtype(exchange_dtype)
+    faults.validate_degradation(degradation)
+    fault_spec = faults.resolve_fault_spec(fault_spec)
     if interior not in ("block_ell", "dense"):
         raise ValueError(f"unknown interior {interior!r}")
     S, n, nl = parts.n_shards, parts.n, parts.n_local
@@ -870,7 +912,8 @@ def build_general_plan(op, parts: GeneralPartition, mesh, axis: str, *,
         coupl = tuple((ex[4 * k + 1], ex[4 * k + 2], ex[4 * k + 3])
                       for k in range(n_off))
         mv = make_exchange_matvec(interior_mv, sends, coupl, axis, size,
-                                  exchange_dtype, error_feedback)
+                                  exchange_dtype, error_feedback,
+                                  fault_spec, degradation)
         if size == 1 and interior == "block_ell":
             # no exchange on a 1-shard mesh: tag for the single-launch
             # sweep kernel, exactly like the banded 1-shard path
@@ -892,6 +935,9 @@ def build_general_plan(op, parts: GeneralPartition, mesh, axis: str, *,
         "edge_cut": parts.edge_cut,
         "exchange_dtype": exchange_dtype,
         "error_feedback": bool(error_feedback),
+        "fault_spec": faults.spec_info(fault_spec),
+        "degradation": degradation,
+        "fault_key": faults.fault_key(fault_spec, degradation),
         "exchange_collectives_per_round": n_off if S > 1 else 0,
         "halo_bytes_per_apply": general_bytes_per_apply(
             parts, op.K, 1, exchange_dtype) if S > 1 else 0,

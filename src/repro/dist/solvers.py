@@ -302,6 +302,7 @@ def solve_plan(
     history: bool = False,
     use_pallas: Optional[bool] = None,
     vmem_budget: Optional[int] = None,
+    check_every: int = 0,
 ) -> SolveResult:
     """Apply x = g(P) y by the Section-V method of choice, distributed.
 
@@ -313,7 +314,22 @@ def solve_plan(
     — tightening it forces the logged per-order fallback, the knob
     `tools/lint_repro.py`'s JX-VMEM-BUDGET check and the budget-sweep
     benchmarks share.  It changes the traced program, so it is part of the
-    `compiled_solve` cache key like every other solver kwarg."""
+    `compiled_solve` cache key like every other solver kwarg.
+
+    ``check_every=r`` (default 0 = off, exactly today's behavior) arms the
+    **divergence guard**: the solve evaluates the relative residual
+    ``||num(P) y - den(P) x|| / ||num(P) y|`` under the plan's own
+    (possibly fault-injected) matvec and reports it honestly in
+    ``info["residual"]`` / ``info["diverged"]``, with
+    ``info["exchange_rounds"]`` counting the residual evaluations' extra
+    matvecs.  For plain ``method="jacobi"`` (a stationary iteration, so
+    restarting from the current iterate is trajectory-exact) the solve
+    runs in chunks of r rounds with a residual/NaN check between chunks
+    and exits early once the iteration has demonstrably diverged
+    (non-finite, or growing past ``2 x max(best, 1)``); the other methods
+    run to completion and take a single post-solve residual/NaN check.
+    Guarded runs are eager (one runner launch per chunk), so serving
+    loops should keep ``check_every=0`` on known-convergent systems."""
     if method not in METHODS:
         raise ValueError(
             f"unknown solve method {method!r}; available: {METHODS}")
@@ -334,10 +350,17 @@ def solve_plan(
 
     y = jnp.asarray(y)
     info: Dict[str, Any] = {"num": num, "den": den}
+    check_every = int(check_every)
+    if check_every < 0:
+        raise ValueError("check_every must be >= 0")
 
     if method == "chebyshev":
-        return _solve_chebyshev(plan, runner, y, num, den, K, history,
-                                use_pallas, vmem_budget, info)
+        res = _solve_chebyshev(plan, runner, y, num, den, K, history,
+                               use_pallas, vmem_budget, info)
+        if check_every > 0:
+            _post_solve_check(res, runner, y, num, den, use_pallas,
+                              vmem_budget, check_every)
+        return res
     if den is None and not (method == "arma" and poles is not None):
         raise ValueError(
             f"method {method!r} needs the rational filter spec: pass "
@@ -346,12 +369,118 @@ def solve_plan(
             "inverse_filter_rational)" + (
                 "; arma also accepts an explicit poles=/residues= form"
                 if method == "arma" else ""))
+    if method == "jacobi" and check_every > 0 and not history:
+        return _solve_jacobi_guarded(plan, runner, y, num, den, K, rho,
+                                     den_diag, x0, use_pallas, vmem_budget,
+                                     check_every, info)
     if method in ("jacobi", "cheb_jacobi"):
-        return _solve_jacobi(plan, runner, y, num, den, K, method, rho,
-                             den_diag, x0, history, use_pallas, vmem_budget,
-                             info)
-    return _solve_arma(plan, runner, y, num, den, K, poles, residues, const,
-                       x0, history, info)
+        res = _solve_jacobi(plan, runner, y, num, den, K, method, rho,
+                            den_diag, x0, history, use_pallas, vmem_budget,
+                            info)
+    else:
+        res = _solve_arma(plan, runner, y, num, den, K, poles, residues,
+                          const, x0, history, info)
+    if check_every > 0:
+        _post_solve_check(res, runner, y, num, den, use_pallas, vmem_budget,
+                          check_every)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Divergence guard (check_every=r)
+# ---------------------------------------------------------------------------
+#: A checked residual counts as divergence once it exceeds this factor
+#: times max(best residual so far, 1.0) — 1.0 being the zero iterate's
+#: relative residual, so a solve that never beats "do nothing" and is
+#: growing is flagged while honest slow convergence is not.
+_DIVERGENCE_FACTOR = 2.0
+
+
+def _solve_residual(runner, y, x, num, den, use_pallas, vmem_budget):
+    """Relative residual ||num(P) y - den(P) x|| / ||num(P) y|| evaluated
+    through the plan's own matvec (the fault-injected one, if any) — the
+    number a real deployment could actually measure.  Costs
+    deg(num) + deg(den) exchange rounds; callers account for them."""
+
+    def fn(mv, yl, xl):
+        mv = _with_budget(mv, vmem_budget)
+        return poly_matvec(mv, num, yl), poly_matvec(mv, den, xl)
+
+    b, ax = runner(fn, (y, x))
+    bn = float(jnp.linalg.norm(b))
+    rn = float(jnp.linalg.norm(b - ax))
+    return rn / max(bn, 1e-30)
+
+
+def _post_solve_check(res, runner, y, num, den, use_pallas, vmem_budget,
+                      check_every):
+    """Single residual/NaN check after a completed solve (methods whose
+    trajectory cannot restart mid-run: chebyshev, cheb_jacobi, arma, and
+    any history-recording run).  Mutates ``res.info`` in place."""
+    finite = bool(jnp.all(jnp.isfinite(res.x)))
+    residual = None
+    if den is not None:
+        residual = _solve_residual(runner, y, res.x, num, den, use_pallas,
+                                   vmem_budget)
+        res.info["exchange_rounds"] = (
+            res.info.get("exchange_rounds", 0)
+            + (len(num) - 1) + (len(den) - 1))
+    diverged = (not finite) or (residual is not None
+                                and not np.isfinite(residual))
+    if residual is not None and np.isfinite(residual):
+        diverged = diverged or residual > _DIVERGENCE_FACTOR
+    res.info.update(check_every=check_every, residual=residual,
+                    diverged=bool(diverged))
+
+
+def _solve_jacobi_guarded(plan, runner, y, num, den, K, rho, den_diag, x0,
+                          use_pallas, vmem_budget, check_every, info):
+    """Plain Jacobi in chunks of `check_every` rounds with a residual/NaN
+    check between chunks and early exit on divergence.
+
+    Jacobi (Eq. (24)) is a stationary iteration — restarting from the
+    current iterate reproduces the unchunked trajectory exactly (the one
+    caveat is per-runner-launch state like the fault injector's round
+    counter and the int8 error-feedback residuals, which reset per chunk;
+    determinism per configuration is preserved).  ``exchange_rounds``
+    reports what actually ran: per chunk, deg(num) for the right-hand
+    side + iters x deg(den) for the sweep + deg(num) + deg(den) for the
+    residual evaluation.
+    """
+    deg_den = len(den) - 1
+    deg_num = len(num) - 1
+    x = x0
+    rounds = 0
+    done = 0
+    residuals = []
+    best = 1.0  # the zero iterate's relative residual
+    diverged = False
+    while done < K:
+        iters = min(check_every, K - done)
+        sub = _solve_jacobi(plan, runner, y, num, den, iters, "jacobi",
+                            rho, den_diag, x, False, use_pallas,
+                            vmem_budget, dict(info))
+        x = sub.x
+        done += iters
+        rounds += iters * deg_den + deg_num
+        res = _solve_residual(runner, y, x, num, den, use_pallas,
+                              vmem_budget)
+        rounds += deg_den + deg_num
+        residuals.append(res)
+        if not np.isfinite(res) or res > _DIVERGENCE_FACTOR * max(best, 1.0):
+            diverged = True
+            logger.warning(
+                "solve[jacobi]: diverged at round %d/%d "
+                "(residual %.3e, best %.3e) — stopping early", done, K, res,
+                best)
+            break
+        best = min(best, res)
+    info.update(matvecs_per_round=deg_den, exchange_rounds=rounds,
+                check_every=check_every, residual=residuals[-1],
+                residual_history=tuple(residuals), diverged=diverged,
+                rounds_run=done)
+    return SolveResult(x=x, method="jacobi", backend=plan.backend,
+                       n_iters=done, info=info)
 
 
 # ---------------------------------------------------------------------------

@@ -25,11 +25,11 @@ Usage: API.md ("Serving"); request walk-through: docs/ARCHITECTURE.md.
 from .batching import bucket_for, pack_batch, unpack_batch
 from .clock import VirtualClock, WallClock
 from .engine import DEFAULT_BUCKETS, ServeEngine
-from .loadgen import (ArrivalEvent, burst_arrivals, poisson_arrivals,
-                      replay_virtual, signal_for)
+from .loadgen import (ArrivalEvent, RetryPolicy, burst_arrivals,
+                      poisson_arrivals, replay_virtual, signal_for)
 from .metrics import BatchRecord, LatencyAccounter
-from .request import (CompatKey, PendingError, Response, ServeFuture,
-                      compat_key)
+from .request import (CompatKey, PendingError, RequestFailed, Response,
+                      ServeFuture, compat_key)
 
 __all__ = [
     "ArrivalEvent",
@@ -38,7 +38,9 @@ __all__ = [
     "DEFAULT_BUCKETS",
     "LatencyAccounter",
     "PendingError",
+    "RequestFailed",
     "Response",
+    "RetryPolicy",
     "ServeEngine",
     "ServeFuture",
     "VirtualClock",

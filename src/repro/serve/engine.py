@@ -74,12 +74,31 @@ class ServeEngine:
     RP-HOST-SYNC); False leaves results as in-flight jax arrays, which
     is the right mode under a virtual clock where execution time is
     modelled as zero anyway.
+
+    Failure containment (every admitted request is answered exactly
+    once, as a result or an error Response — see
+    :class:`~repro.serve.request.Response`):
+
+    * ``max_queue_depth`` bounds total admitted-but-undispatched
+      requests; at the bound, :meth:`submit` returns a future already
+      resolved with a ``"rejected"`` error Response (the
+      `loadgen.RetryPolicy` backoff hook's trigger) instead of growing
+      the queue without bound.
+    * ``submit(..., deadline=d)`` gives one request d seconds (engine
+      clock, from arrival) to dispatch; past it the request completes
+      with an ``"expired"`` error Response — at the next :meth:`poll`
+      sweep or at dispatch time, whichever comes first.
+    * an exception inside one batch's compiled callable fails ONLY that
+      batch: each rider completes with a ``"dispatch"`` error Response,
+      the exception does not propagate out of submit()/poll(), and the
+      engine keeps serving subsequent batches.
     """
 
     def __init__(self, plans, *, buckets=DEFAULT_BUCKETS,
                  max_wait: float = 0.005, clock=None,
                  sync_results: bool = True,
-                 accounter: Optional[LatencyAccounter] = None):
+                 accounter: Optional[LatencyAccounter] = None,
+                 max_queue_depth: Optional[int] = None):
         if not isinstance(plans, Mapping):
             plans = {"default": plans}
         if not plans:
@@ -92,6 +111,11 @@ class ServeEngine:
         if max_wait < 0:
             raise ValueError(f"max_wait must be >= 0, got {max_wait}")
         self.max_wait = float(max_wait)
+        if max_queue_depth is not None and int(max_queue_depth) < 1:
+            raise ValueError(
+                f"max_queue_depth must be >= 1, got {max_queue_depth}")
+        self.max_queue_depth = (int(max_queue_depth)
+                                if max_queue_depth is not None else None)
         self.clock = clock if clock is not None else WallClock()
         self.sync_results = bool(sync_results)
         self.metrics = accounter if accounter is not None \
@@ -101,7 +125,7 @@ class ServeEngine:
 
     # -- admission -----------------------------------------------------------
     def submit(self, signal, *, op: str = "default", kind: str = "apply",
-               method: Optional[str] = None,
+               method: Optional[str] = None, deadline: Optional[float] = None,
                **solve_kwargs) -> ServeFuture:
         """Admit one request; returns its (cooperative) future.
 
@@ -110,23 +134,43 @@ class ServeEngine:
         axis belongs to the engine.  Compatible requests (same
         :func:`compat_key`) coalesce; a full largest bucket dispatches
         inline before returning.
+
+        ``deadline`` (seconds from now, engine clock) bounds this
+        request's queue wait — expired requests complete with an error
+        Response.  At a full queue (``max_queue_depth``) the returned
+        future is already resolved with a ``"rejected"`` error Response.
         """
         if op not in self.plans:
             raise KeyError(
                 f"unknown operator {op!r}; registered: "
                 f"{sorted(self.plans)}")
+        if deadline is not None and deadline < 0:
+            raise ValueError(f"deadline must be >= 0, got {deadline}")
         plan = self.plans[op]
         key = compat_key(op, plan, kind, method, solve_kwargs)
         signal = jnp.asarray(signal)
         self._validate_shape(plan, kind, signal)
+        now = self.clock.now()
+        rid = next(self._ids)
+        future = ServeFuture(rid)
+        if (self.max_queue_depth is not None
+                and self.pending_count >= self.max_queue_depth):
+            self.metrics.record_rejected(rid, now)
+            future._resolve(Response(
+                id=rid, key=key, value=None, t_arrival=now, t_dispatch=now,
+                t_complete=now, bucket=0, occupancy=0,
+                error=f"rejected: queue depth {self.pending_count} at "
+                      f"max_queue_depth={self.max_queue_depth}"))
+            logger.debug("serve reject %s: queue full", key.label())
+            return future
         group = self._groups.get(key)
         if group is None:
             group = self._groups.setdefault(
                 key, _Group(method, solve_kwargs))
-        now = self.clock.now()
-        req = Request(id=next(self._ids), key=key, signal=signal,
-                      t_arrival=now, future=None)
-        req.future = ServeFuture(req.id)
+        req = Request(id=rid, key=key, signal=signal, t_arrival=now,
+                      future=future,
+                      deadline=(now + deadline if deadline is not None
+                                else None))
         self.metrics.record_arrival(req.id, now)
         group.queue.append(req)
         while len(group.queue) >= self.buckets[-1]:
@@ -166,11 +210,44 @@ class ServeEngine:
                  if g.queue]
         return min(heads) + self.max_wait if heads else None
 
+    def _expire(self, req, now: float) -> None:
+        """Answer one deadline-passed request with an error Response."""
+        req.future._resolve(Response(
+            id=req.id, key=req.key, value=None, t_arrival=req.t_arrival,
+            t_dispatch=now, t_complete=now, bucket=0, occupancy=0,
+            error=f"expired: deadline {req.deadline:.6f} passed at "
+                  f"{now:.6f} before dispatch"))
+        self.metrics.record_expired(req.id, now)
+        logger.debug("serve expire request %d (%s)", req.id,
+                     req.key.label())
+
+    def _sweep_expired(self, now: float) -> int:
+        """Resolve every queued request whose deadline has passed."""
+        expired = 0
+        for group in self._groups.values():
+            if not group.queue:
+                continue
+            live = deque()
+            dropped = 0
+            for req in group.queue:
+                if req.deadline is not None and now > req.deadline:
+                    self._expire(req, now)
+                    dropped += 1
+                else:
+                    live.append(req)
+            if dropped:
+                group.queue = live
+                expired += dropped
+        return expired
+
     def poll(self) -> int:
         """Deadline flush: dispatch every due group; returns #requests
         served.  Due groups drain oldest-request-first (FIFO fairness
-        across keys), each in largest-bucket chunks."""
+        across keys), each in largest-bucket chunks.  Queued requests
+        whose per-request deadline has passed are answered with an
+        ``"expired"`` error Response first — they never ride a batch."""
         now = self.clock.now()
+        self._sweep_expired(now)
         # dueness is `now >= arrival + max_wait` — the SAME float
         # expression next_deadline() returns, so advancing a virtual
         # clock exactly to a reported deadline always flushes it
@@ -224,21 +301,55 @@ class ServeEngine:
 
     def _dispatch_chunk(self, key: CompatKey, group: _Group) -> int:
         """Pack, launch and unpack the oldest largest-bucket-or-fewer
-        requests of one group; resolves their futures."""
+        requests of one group; resolves their futures.
+
+        Deadline-passed riders are expired (error Response) instead of
+        packed.  An exception from the compiled callable fails exactly
+        this batch: every rider completes with a ``"dispatch"`` error
+        Response and the exception is contained — submit()/poll() keep
+        working and later batches (same group included) dispatch
+        normally.  Returns the number of requests answered."""
         take = min(len(group.queue), self.buckets[-1])
-        reqs = [group.queue.popleft() for _ in range(take)]
-        bucket = bucket_for(take, self.buckets)
+        now = self.clock.now()
+        reqs = []
+        expired = 0
+        for _ in range(take):
+            req = group.queue.popleft()
+            if req.deadline is not None and now > req.deadline:
+                self._expire(req, now)
+                expired += 1
+            else:
+                reqs.append(req)
+        if not reqs:
+            return expired
+        bucket = bucket_for(len(reqs), self.buckets)
         batch, n_valid = pack_batch([r.signal for r in reqs], bucket)
-        fn = self._callable(key, group)
-        t_dispatch = self.clock.now()
-        out = fn(batch)
-        if self.sync_results:
-            # The one deliberate host sync, at the queue boundary: a
-            # batch's completion instant IS the latency sample every
-            # response in it reports (allowlisted RP-HOST-SYNC).
-            out = jax.block_until_ready(out)
-        t_complete = self.clock.now()
-        rows = unpack_batch(out, n_valid)
+        t_dispatch = now
+        try:
+            fn = self._callable(key, group)
+            out = fn(batch)
+            if self.sync_results:
+                # The one deliberate host sync, at the queue boundary: a
+                # batch's completion instant IS the latency sample every
+                # response in it reports (allowlisted RP-HOST-SYNC).
+                out = jax.block_until_ready(out)
+            t_complete = self.clock.now()
+            rows = unpack_batch(out, n_valid)
+        except Exception as exc:  # noqa: BLE001 — contained by design
+            t_complete = self.clock.now()
+            msg = f"dispatch: {type(exc).__name__}: {exc}"
+            logger.exception(
+                "serve dispatch %s failed (bucket=%d, occupancy=%d); "
+                "failing this batch's %d request(s), engine stays up",
+                key.label(), bucket, n_valid, len(reqs))
+            for req in reqs:
+                req.future._resolve(Response(
+                    id=req.id, key=key, value=None,
+                    t_arrival=req.t_arrival, t_dispatch=t_dispatch,
+                    t_complete=t_complete, bucket=bucket,
+                    occupancy=n_valid, error=msg))
+                self.metrics.record_failed(req.id, t_complete)
+            return expired + len(reqs)
         for req, row in zip(reqs, rows):
             resp = Response(id=req.id, key=key, value=row,
                             t_arrival=req.t_arrival,
@@ -252,7 +363,7 @@ class ServeEngine:
             t_dispatch=t_dispatch, t_complete=t_complete))
         logger.debug("serve dispatch %s: bucket=%d occupancy=%d",
                      key.label(), bucket, n_valid)
-        return n_valid
+        return expired + n_valid
 
     # -- warmup --------------------------------------------------------------
     def warm(self) -> int:

@@ -12,6 +12,7 @@ Per-request signals are derived from the event's own seed
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -105,8 +106,30 @@ def signal_for(event: ArrivalEvent, n: int,
     return rng.standard_normal(shape).astype(np.float32)
 
 
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Retry/backoff hook for admission-rejected submissions.
+
+    When the engine's bounded queue refuses a request ("rejected" error
+    Response), :func:`replay_virtual` resubmits it up to `max_retries`
+    times, waiting ``backoff * factor**attempt`` seconds before attempt
+    `attempt + 1`.  Purely client-side: the engine itself never retries
+    (exactly-once stays with the caller)."""
+
+    max_retries: int = 3
+    backoff: float = 0.002
+    factor: float = 2.0
+
+    def delay(self, attempt: int) -> float:
+        """Seconds to wait after rejected attempt number `attempt`
+        (0-based) before resubmitting."""
+        return self.backoff * (self.factor ** attempt)
+
+
 def replay_virtual(engine, events: Sequence[ArrivalEvent], n: int,
-                   eta: Optional[int] = None) -> Dict[int, Any]:
+                   eta: Optional[int] = None,
+                   deadline: Optional[float] = None,
+                   retry: Optional[RetryPolicy] = None) -> Dict[int, Any]:
     """Replay a stream against a virtual-clock engine, deterministically.
 
     Advances the engine's clock event-to-event (flushing any deadlines
@@ -114,19 +137,37 @@ def replay_virtual(engine, events: Sequence[ArrivalEvent], n: int,
     drains with :meth:`run_until_idle`, and returns
     ``{event index: future}``.  Zero sleeps; identical streams produce
     identical scheduling decisions and metrics.
+
+    `deadline` (relative seconds, applied to every submit) forwards to
+    ``engine.submit(deadline=...)``.  `retry` enables the client-side
+    backoff hook: an admission-rejected submit is re-queued at
+    ``t + retry.delay(attempt)`` and the returned future for that event
+    index is the LAST attempt's (so a stream can absorb transient
+    queue-full windows without losing exactly-once accounting — every
+    attempt is its own request id in the metrics).
     """
-    futures = {}
+    heap = []
     for i, ev in enumerate(sorted(events, key=lambda e: e.t)):
+        heap.append((ev.t, i, 0, ev))
+    heapq.heapify(heap)
+    futures: Dict[int, Any] = {}
+    while heap:
+        t, i, attempt, ev = heapq.heappop(heap)
         while True:
-            deadline = engine.next_deadline()
-            if deadline is None or deadline > ev.t:
+            due = engine.next_deadline()
+            if due is None or due > t:
                 break
-            engine.clock.advance_to(deadline)
+            engine.clock.advance_to(due)
             engine.poll()
-        engine.clock.advance_to(ev.t)
+        engine.clock.advance_to(t)
         engine.poll()
-        futures[i] = engine.submit(
+        fut = engine.submit(
             signal_for(ev, n, eta), op=ev.op, kind=ev.kind,
-            method=ev.method, **ev.kwargs())
+            method=ev.method, deadline=deadline, **ev.kwargs())
+        futures[i] = fut
+        if (retry is not None and fut.done() and fut.response.rejected
+                and attempt < retry.max_retries):
+            heapq.heappush(
+                heap, (t + retry.delay(attempt), i, attempt + 1, ev))
     engine.run_until_idle()
     return futures

@@ -51,6 +51,11 @@ class CompatKey:
     #: different partitions trace to different exchange programs and must
     #: never coalesce.
     partition: str = "banded"
+    #: Fault-injection identity (`repro.dist.faults.fault_key`): "none"
+    #: for clean plans.  A fault-injected plan traces a different program
+    #: AND answers with degraded accuracy, so its requests must never
+    #: coalesce with (or share compiled entries with) clean ones.
+    faults: str = "none"
     extra: Tuple[Tuple[str, Any], ...] = ()
 
     def label(self) -> str:
@@ -63,6 +68,8 @@ class CompatKey:
             parts.append(f"exchange={self.exchange}")
         if self.partition != "banded":
             parts.append(f"partition={self.partition}")
+        if self.faults != "none":
+            parts.append(f"faults={self.faults}")
         if self.tau is not None:
             parts.append(f"tau={self.tau}")
         parts += [f"{k}={v}" for k, v in self.extra]
@@ -94,7 +101,8 @@ def compat_key(op_name: str, plan, kind: str, method: Optional[str],
                 f"(got method={method!r}, kwargs={sorted(kwargs)})")
         return CompatKey(op=op_name, kind=kind, order=int(plan.K),
                          exchange=plan.info.get("exchange_dtype", "f32"),
-                         partition=_plan_partition(plan))
+                         partition=_plan_partition(plan),
+                         faults=plan.info.get("fault_key", "none"))
     if method is None:
         raise ValueError("kind='solve' requires method=")
     if kwargs.get("history"):
@@ -110,12 +118,21 @@ def compat_key(op_name: str, plan, kind: str, method: Optional[str],
     return CompatKey(op=op_name, kind=kind, method=method, order=order,
                      tau=tau, extra=extra,
                      exchange=plan.info.get("exchange_dtype", "f32"),
-                     partition=_plan_partition(plan))
+                     partition=_plan_partition(plan),
+                     faults=plan.info.get("fault_key", "none"))
 
 
 @dataclasses.dataclass(frozen=True)
 class Response:
-    """One answered request: the unpacked result row + its timeline."""
+    """One answered request: the unpacked result row + its timeline.
+
+    Every admitted request completes with exactly one Response — either a
+    result (``error is None``) or an error outcome: ``"rejected: ..."``
+    (admission refused at a full queue), ``"expired: ..."`` (per-request
+    deadline passed before dispatch) or ``"dispatch: ..."`` (the batch's
+    compiled callable raised; only that batch fails, the engine stays
+    serviceable).  ``value`` is None on error responses.
+    """
 
     id: int
     key: CompatKey
@@ -125,6 +142,16 @@ class Response:
     t_complete: float
     bucket: int                # padded batch size it rode
     occupancy: int             # real requests in that batch
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+    @property
+    def rejected(self) -> bool:
+        """Admission-rejected (the retry/backoff hook's trigger)."""
+        return self.error is not None and self.error.startswith("rejected")
 
     @property
     def latency(self) -> float:
@@ -137,6 +164,12 @@ class Response:
 
 class PendingError(RuntimeError):
     """`ServeFuture.result()` before the engine dispatched the batch."""
+
+
+class RequestFailed(RuntimeError):
+    """`ServeFuture.result()` on a request that completed with an error
+    Response (rejected / expired / dispatch failure).  The full error
+    Response stays readable via `ServeFuture.response`."""
 
 
 class ServeFuture:
@@ -173,15 +206,24 @@ class ServeFuture:
         return self._response
 
     def result(self) -> Any:
-        return self.response.value
+        resp = self.response
+        if resp.error is not None:
+            raise RequestFailed(
+                f"request {self.request_id} failed: {resp.error}")
+        return resp.value
 
 
 @dataclasses.dataclass
 class Request:
-    """Internal queue entry (one submit)."""
+    """Internal queue entry (one submit).
+
+    `deadline` is the ABSOLUTE completion deadline (engine-clock seconds;
+    None = wait forever): a request still queued past it completes with
+    an ``"expired"`` error Response instead of riding a batch."""
 
     id: int
     key: CompatKey
     signal: Any
     t_arrival: float
     future: ServeFuture
+    deadline: Optional[float] = None

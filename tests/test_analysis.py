@@ -463,6 +463,27 @@ def bad(v):
 fs = A.check_comm_schedule(bad, jax.ShapeDtypeStruct((64,), np.float32))
 assert {f.rule for f in fs} == {"JX-PPERMUTE-BIJECTION"}, fs
 assert "devices [7] never send" in fs[0].message, fs[0].message
+
+# JX-FAULT-NO-EXTRA-COLLECTIVES, positive: a fully-armed fault config on
+# the quantized wire traces the identical collective schedule as its
+# clean twin on both sharded halo backends
+fault_spec = {"drop_prob": 0.1, "stale_prob": 0.1, "noise_prob": 0.1,
+              "seed": 3}
+for backend in ("halo", "pallas_halo"):
+    clean = op.plan(backend, mesh=mesh, exchange_dtype="int8")
+    faulted = op.plan(backend, mesh=mesh, exchange_dtype="int8",
+                      fault_spec=fault_spec, degradation="hold_last")
+    fs = A.check_fault_schedule(clean, faulted, solve_methods=("jacobi",))
+    assert fs == [], (backend, [str(f) for f in fs])
+
+# negative: a plan whose exchange structure differs (K=12 vs K=10 — four
+# extra rounds) is exactly what the rule must flag
+op12 = GraphOperator(P=g.laplacian(),
+                     multipliers=wavelets.sgwt_multipliers(lmax, J=2),
+                     lmax=lmax, K=12)
+fs = A.check_fault_schedule(op.plan("halo", mesh=mesh),
+                            op12.plan("halo", mesh=mesh))
+assert fs and {f.rule for f in fs} == {"JX-FAULT-NO-EXTRA-COLLECTIVES"}, fs
 print("ANALYSIS 8SHARD OK")
 """
 

@@ -170,6 +170,29 @@ for label, ef in (("ef", True), ("plain", False)):
 print("streaming acc errs", acc_errs)
 assert acc_errs["ef"] < acc_errs["plain"] / 4, acc_errs
 
+# fault injection on the quantized wires: the measured schedule must be
+# UNCHANGED — rounds stay exactly K (2K|E| messages), bytes-per-round stay
+# the compressed-wire bytes, at every dtype, batched or not.  Receiver-side
+# substitution costs accuracy, never messages.
+from repro.dist import FaultSpec
+fspec = FaultSpec(drop_prob=0.1, stale_prob=0.05, noise_prob=0.05, seed=1)
+for backend in ("halo", "pallas_halo"):
+    for dt in ("f32", "bf16", "int8"):
+        clean = op.plan(backend, mesh=mesh, exchange_dtype=dt)
+        for degr in ("zero_fill", "hold_last"):
+            plan = op.plan(backend, mesh=mesh, exchange_dtype=dt,
+                           fault_spec=fspec, degradation=degr)
+            st = plan_comm_stats(plan)["apply"]
+            stb = plan_comm_stats(plan, batch=16)["apply"]
+            assert st.exchange_rounds == stb.exchange_rounds == K, (
+                backend, dt, degr, st.exchange_rounds, stb.exchange_rounds)
+            base_st = plan_comm_stats(clean)["apply"]
+            assert st.bytes_per_round == base_st.bytes_per_round, (
+                backend, dt, degr)
+            y = plan.apply(x)
+            assert bool(jnp.isfinite(y).all()), (backend, dt, degr)
+print("FAULT ROUNDS OK")
+
 # loose end-to-end solver gate: a bf16-exchange jacobi solve still solves
 plan16 = op.plan("halo", mesh=mesh, exchange_dtype="bf16")
 y = ref[:, 0, :]
@@ -183,6 +206,7 @@ print("EXCHANGE DTYPE OK")
 
 def test_exchange_dtypes_8shards():
     out = run_payload(PAYLOAD, n_devices=8)
+    assert "FAULT ROUNDS OK" in out
     assert "EXCHANGE DTYPE OK" in out
 
 

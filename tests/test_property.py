@@ -7,7 +7,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import chebyshev as cheb
 from repro.core import filters, graph, lasso, wavelets
 from repro.core.multiplier import graph_multiplier
-from repro.dist import GraphOperator, gossip
+from repro.dist import GraphOperator, faults, gossip
 from repro import serve
 
 SET = dict(max_examples=15, deadline=None)
@@ -230,6 +230,45 @@ def test_bound_B_respected_on_spectrum(seed, K):
     lam = np.linalg.eigvalsh(np.asarray(g.laplacian()))
     vals = np.asarray(cheb.cheb_eval(c, jnp.asarray(lam), lmax))
     assert np.max(np.abs(vals - gf(lam))) <= B + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection invariants (repro.dist.faults)
+# ---------------------------------------------------------------------------
+@settings(**SET)
+@given(drop=st.floats(0.0, 1.0), stale=st.floats(0.0, 1.0),
+       noise=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1),
+       degr=st.sampled_from(faults.DEGRADATIONS))
+def test_fault_key_none_iff_inactive(drop, stale, noise, seed, degr):
+    """fault_key collapses to "none" exactly when no channel can fire —
+    the cache-sharing contract (a p=0 plan traces the clean program)."""
+    spec = faults.FaultSpec(drop_prob=drop, stale_prob=stale,
+                            noise_prob=noise, seed=seed)
+    key = faults.fault_key(spec, degr)
+    assert (key == "none") == (not spec.active)
+    # the key is a pure function of the spec: same spec, same key
+    assert key == faults.fault_key(
+        dict(drop_prob=drop, stale_prob=stale, noise_prob=noise,
+             seed=seed), degr)
+    # and an injector exists exactly for active specs at exchanging sites
+    inj = faults.make_injector(spec, degr, "graph", exchanging=True)
+    assert (inj is None) == (not spec.active)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1), p=st.floats(0.01, 1.0),
+       h=st.integers(1, 64))
+def test_flip_low_bits_flips_at_most_one_low_bit(seed, p, h):
+    """Wire bit-noise is bounded by construction: each uint8 lane differs
+    from the original in at most ONE of its low 8 bits."""
+    rng = np.random.RandomState(seed)
+    lanes = jnp.asarray(rng.randint(0, 256, size=(3, h)), jnp.uint8)
+    out = faults._flip_low_bits(lanes, jax.random.PRNGKey(seed), p)
+    diff = np.asarray(jnp.bitwise_xor(lanes, out))
+    assert np.isin(diff, [0] + [1 << b for b in range(8)]).all()
+    # deterministic per key
+    again = faults._flip_low_bits(lanes, jax.random.PRNGKey(seed), p)
+    assert np.array_equal(np.asarray(out), np.asarray(again))
 
 
 # ---------------------------------------------------------------------------

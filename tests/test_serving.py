@@ -17,8 +17,9 @@ from _subproc import run_payload
 
 from repro.core import graph, wavelets
 from repro.dist import GraphOperator
-from repro.serve import (PendingError, ServeEngine, VirtualClock, WallClock,
-                         burst_arrivals, poisson_arrivals, replay_virtual)
+from repro.serve import (PendingError, RequestFailed, ServeEngine,
+                         VirtualClock, WallClock, burst_arrivals,
+                         poisson_arrivals, replay_virtual)
 
 MAX_WAIT = 0.005
 
@@ -296,6 +297,125 @@ def test_summary_schema(op48, dense_plan):
     assert s["signals_per_sec"] > 0
     assert s["mean_batch_occupancy"] >= 1.0
     assert 0.0 <= s["padding_waste"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Hardening: dispatch-failure containment, deadlines, bounded queue, retry
+# ---------------------------------------------------------------------------
+def test_dispatch_failure_fails_only_that_batch(op48, dense_plan,
+                                                monkeypatch):
+    """A poisoned compiled callable fails exactly its batch: every rider
+    gets a ``dispatch:`` error Response (no exception out of submit/poll,
+    no stranded futures) and the engine keeps serving later batches —
+    the regression test for the flush-failure hazard."""
+    g, _ = op48
+    eng, _ = make_engine(dense_plan, buckets=(1, 4))
+    orig = eng._callable
+    armed = {"on": True}
+
+    def poisoned(key, group):
+        if armed["on"]:
+            def bad(batch):
+                raise RuntimeError("poisoned kernel")
+            return bad
+        return orig(key, group)
+
+    monkeypatch.setattr(eng, "_callable", poisoned)
+    bad_futs = [eng.submit(sig(g, i)) for i in range(4)]  # full bucket
+    for fut in bad_futs:                   # dispatched inline, all failed
+        assert fut.done() and not fut.response.ok
+        assert fut.response.error.startswith("dispatch: RuntimeError")
+        assert fut.response.value is None
+        with pytest.raises(RequestFailed, match="poisoned"):
+            fut.result()
+    armed["on"] = False                    # engine must still be alive
+    good_futs = [eng.submit(sig(g, i + 10)) for i in range(4)]
+    for i, fut in enumerate(good_futs):
+        want = np.asarray(dense_plan.apply(sig(g, i + 10)))
+        np.testing.assert_allclose(np.asarray(fut.result()), want,
+                                   rtol=1e-5, atol=1e-5)
+    s = eng.metrics.summary()
+    assert s["n_failed"] == 4 and s["n_served"] == 4
+    assert s["served_exactly_once"] and eng.pending_count == 0
+
+
+def test_deadline_expires_queued_request(op48, dense_plan):
+    """A request whose deadline passes before dispatch completes with an
+    ``expired:`` error Response instead of waiting forever."""
+    g, _ = op48
+    eng, clock = make_engine(dense_plan, buckets=(4,), max_wait=0.05)
+    doomed = eng.submit(sig(g, 0), deadline=0.002)
+    alive = eng.submit(sig(g, 1))
+    clock.advance(0.003)
+    eng.poll()                             # sweep: past the deadline
+    assert doomed.done() and doomed.response.error.startswith("expired:")
+    assert not alive.done()
+    eng.run_until_idle()                   # the survivor still serves
+    np.testing.assert_allclose(np.asarray(alive.result()),
+                               np.asarray(dense_plan.apply(sig(g, 1))),
+                               rtol=1e-5, atol=1e-5)
+    s = eng.metrics.summary()
+    assert s["n_expired"] == 1 and s["n_served"] == 1
+    assert s["served_exactly_once"]
+    with pytest.raises(ValueError, match="deadline"):
+        eng.submit(sig(g, 2), deadline=-0.1)
+
+
+def test_deadline_expiry_at_dispatch_time(op48, dense_plan):
+    """Expiry is also enforced when the batch is popped: a request whose
+    deadline passed rides no batch even if the sweep never saw it."""
+    g, _ = op48
+    eng, clock = make_engine(dense_plan, buckets=(2,), max_wait=0.05)
+    doomed = eng.submit(sig(g, 0), deadline=0.001)
+    clock.advance(0.002)
+    live = eng.submit(sig(g, 1))           # fills the bucket -> dispatch
+    eng.run_until_idle()
+    assert doomed.response.error.startswith("expired:")
+    assert live.response.ok
+    assert eng.metrics.summary()["served_exactly_once"]
+
+
+def test_bounded_queue_rejects_at_admission(op48, dense_plan):
+    """`max_queue_depth` refuses requests at admission with a
+    ``rejected:`` error Response — rejected requests never enter the
+    exactly-once set and the queue never exceeds the bound."""
+    g, _ = op48
+    eng, _ = make_engine(dense_plan, buckets=(8,), max_wait=0.05)
+    eng.max_queue_depth = 2
+    admitted = [eng.submit(sig(g, i)) for i in range(2)]
+    bounced = eng.submit(sig(g, 9))
+    assert bounced.done() and bounced.response.rejected
+    assert "max_queue_depth=2" in bounced.response.error
+    assert eng.pending_count == 2
+    eng.run_until_idle()
+    assert all(f.response.ok for f in admitted)
+    s = eng.metrics.summary()
+    assert s["n_rejected"] == 1 and s["n_served"] == 2
+    assert s["n_submitted"] == 2           # rejections are not admissions
+    assert s["served_exactly_once"]
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        ServeEngine(dense_plan, clock=VirtualClock(), max_queue_depth=0)
+
+
+def test_retry_policy_absorbs_queue_full_windows(op48, dense_plan):
+    """The loadgen retry/backoff hook resubmits rejected requests after
+    the queue drains: every event index ends with a served future."""
+    from repro.serve import RetryPolicy
+    g, _ = op48
+    clock = VirtualClock()
+    eng = ServeEngine(dense_plan, buckets=(1, 4), max_wait=0.001,
+                      clock=clock, sync_results=False, max_queue_depth=2)
+    events = burst_arrivals(n_bursts=2, burst_size=6, period=0.05, seed=0,
+                            mix=((1.0, "apply", None, {}),))
+    futs = replay_virtual(eng, events, n=g.n_vertices,
+                          retry=RetryPolicy(max_retries=4, backoff=0.002))
+    assert set(futs) == set(range(len(events)))
+    assert all(f.response.ok for f in futs.values())
+    s = eng.metrics.summary()
+    assert s["n_rejected"] > 0             # the bound really bit
+    assert s["n_served"] == len(events)
+    assert s["served_exactly_once"]
+    assert RetryPolicy().delay(2) == pytest.approx(0.002 * 4.0)
 
 
 # ---------------------------------------------------------------------------

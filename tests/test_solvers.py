@@ -174,6 +174,69 @@ def test_cheb_jacobi_rejects_divergent_split(solver_setup):
         plan.solve(y, "cheb_jacobi", tau=TAU, r=1, n_iters=10, rho=1.3)
 
 
+def test_divergence_guard_off_by_default(solver_setup):
+    """check_every=0 is exactly the old behavior: no residual evaluation,
+    no guard keys in info."""
+    g, Ln, op, y, _, _ = solver_setup
+    plan = op.plan("dense")
+    res = plan.solve(y, "jacobi", tau=TAU, n_iters=20)
+    assert "diverged" not in res.info and "residual" not in res.info
+    with pytest.raises(ValueError, match="check_every"):
+        plan.solve(y, "jacobi", tau=TAU, n_iters=20, check_every=-1)
+
+
+@pytest.mark.parametrize("backend", ["dense", "halo"])
+def test_guarded_jacobi_matches_unguarded(solver_setup, backend):
+    """Jacobi is stationary, so chunked-with-checks reproduces the
+    unchunked trajectory; the guard reports an honest residual and the
+    extra exchange rounds it spent measuring it."""
+    g, Ln, op, y, direct, _ = solver_setup
+    plan = _plan(op, backend)
+    base = plan.solve(y, "jacobi", tau=TAU, n_iters=20)
+    res = plan.solve(y, "jacobi", tau=TAU, n_iters=20, check_every=7)
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(base.x),
+                               atol=1e-6)
+    assert res.n_iters == 20 and not res.info["diverged"]
+    assert res.info["check_every"] == 7 and res.info["rounds_run"] == 20
+    assert np.isfinite(res.info["residual"])
+    assert len(res.info["residual_history"]) == 3      # ceil(20/7) checks
+    assert res.info["exchange_rounds"] > base.info["exchange_rounds"]
+
+
+def test_guarded_jacobi_stops_early_on_divergence(solver_setup, caplog):
+    """A demonstrably diverging rational split exits early with
+    info['diverged']=True instead of returning garbage silently."""
+    g, Ln, op, y, _, _ = solver_setup
+    plan = op.plan("dense")
+    # den whose Jacobi split has off-diagonal mass >> diagonal: the
+    # iteration matrix's spectral radius exceeds 1, iterates blow up
+    with caplog.at_level(logging.WARNING, logger="repro.dist.solvers"):
+        res = plan.solve(y, "jacobi", num=(1.0,), den=(1.0, -5.0, 1.0),
+                         n_iters=60, check_every=5)
+    assert res.info["diverged"]
+    assert res.n_iters < 60 and res.info["rounds_run"] < 60
+    hist = res.info["residual_history"]
+    assert hist[-1] > 2.0 or not np.isfinite(hist[-1])
+    assert any("diverged" in r.message for r in caplog.records)
+
+
+@pytest.mark.parametrize("method", ["cheb_jacobi", "chebyshev"])
+def test_post_solve_check_reports_honest_residual(solver_setup, method):
+    """Methods whose trajectory cannot restart exactly take a single
+    post-solve residual/NaN check under check_every>0."""
+    g, Ln, op, y, _, rho = solver_setup
+    plan = op.plan("dense")
+    kwargs = dict(tau=TAU, n_iters=24, check_every=8)
+    if method == "cheb_jacobi":
+        kwargs.update(r=1, rho=rho)
+    res = plan.solve(y, method, **kwargs)
+    assert res.info["diverged"] is False
+    if method == "chebyshev" and res.info["residual"] is not None:
+        assert np.isfinite(res.info["residual"])
+    if method == "cheb_jacobi":
+        assert res.info["residual"] < 0.5
+
+
 def test_inverse_filter_solved_distributed(solver_setup):
     """Prop. 3 deconvolution for a polynomial blur: plan.solve on the
     inverse_filter_rational spec matches the dense direct solve of

@@ -132,10 +132,17 @@ def _lint_community_operator():
         lmax=lmax, K=LINT_K)
 
 
+#: The fault configuration the JX-FAULT-NO-EXTRA-COLLECTIVES gate traces
+#: (all three channels firing, hold_last for the stateful carried tiles —
+#: the config with the most machinery that could accidentally add rounds).
+LINT_FAULT_SPEC = {"drop_prob": 0.1, "stale_prob": 0.1, "noise_prob": 0.1,
+                   "seed": 0}
+
+
 def jaxpr_findings(shards: int) -> List:
     import jax
 
-    from repro.analysis import check_plan
+    from repro.analysis import check_fault_schedule, check_plan
     from repro.dist.backends import available_backends
 
     n_dev = jax.device_count()
@@ -158,6 +165,13 @@ def jaxpr_findings(shards: int) -> List:
             plan, batches=LINT_BATCHES,
             budget=plan.info.get("sweep_vmem_budget"),
             solve_methods=("jacobi",))
+        if backend in ("halo", "pallas_halo"):
+            faulted = op.plan(backend, mesh=mesh, exchange_dtype="int8",
+                              fault_spec=LINT_FAULT_SPEC,
+                              degradation="hold_last")
+            findings += check_fault_schedule(
+                op.plan(backend, mesh=mesh, exchange_dtype="int8"),
+                faulted, solve_methods=("jacobi",))
     # GeneralPartition matrix: the same invariants (JX-PPERMUTE-BIJECTION
     # in particular — the multi-offset exchange realizes each round as
     # complete ppermute bijections) on a non-banded community graph.
@@ -169,6 +183,12 @@ def jaxpr_findings(shards: int) -> List:
         findings += check_plan(
             plan, batches=LINT_BATCHES,
             budget=plan.info.get("sweep_vmem_budget"),
+            solve_methods=("jacobi",))
+        findings += check_fault_schedule(
+            plan,
+            community_op.plan(backend, mesh=mesh, partition="general",
+                              fault_spec=LINT_FAULT_SPEC,
+                              degradation="hold_last"),
             solve_methods=("jacobi",))
     return findings
 
